@@ -1,0 +1,55 @@
+"""Pallas kernel microbenches (interpret on CPU; numbers are correctness-
+path timings — the TPU perf story lives in the roofline analysis)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_util import emit, time_fn
+from repro.kernels.ell_spmv.ops import ell_spmv
+from repro.kernels.ell_spmv.ref import ell_spmv_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def run(full: bool = False) -> None:
+    rng = np.random.default_rng(0)
+
+    n, w = (16384, 27) if full else (4096, 27)
+    cols = jnp.asarray(rng.integers(0, n, (n, w)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(n, w)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    ref = jax.jit(lambda c, v, xx: ell_spmv_ref(c.T, v.T, xx))
+    emit("kernels/ell_spmv_ref", time_fn(ref, cols, vals, x), f"n={n};w={w}")
+    emit("kernels/ell_spmv_pallas_interpret", time_fn(ell_spmv, cols, vals, x),
+         f"n={n};w={w}")
+
+    V, d, nnz, B = (100000, 64, 8192, 1024) if full else (10000, 64, 1024, 128)
+    table = jnp.asarray(rng.normal(size=(V, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, V, nnz), jnp.int32)
+    seg = jnp.asarray(np.sort(rng.integers(0, B, nnz)), jnp.int32)
+    refb = jax.jit(lambda t, i, s: embedding_bag_ref(t, i, s, B))
+    emit("kernels/embedding_bag_ref", time_fn(refb, table, idx, seg),
+         f"V={V};d={d};nnz={nnz}")
+    emit("kernels/embedding_bag_pallas_interpret",
+         time_fn(lambda t, i, s: embedding_bag(t, i, s, B), table, idx, seg),
+         f"V={V};d={d};nnz={nnz}")
+
+    Bq, S, H, D = (2, 512, 8, 64) if full else (1, 256, 4, 64)
+    q = jnp.asarray(rng.normal(size=(Bq, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(Bq, S, H // 2, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(Bq, S, H // 2, D)), jnp.float32)
+    refa = jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True))
+    emit("kernels/flash_attention_ref", time_fn(refa, q, k, v),
+         f"B={Bq};S={S};H={H};D={D}")
+    emit("kernels/flash_attention_pallas_interpret",
+         time_fn(lambda a, b, c: flash_attention(a, b, c, causal=True), q, k, v),
+         f"B={Bq};S={S};H={H};D={D}")
+
+
+if __name__ == "__main__":
+    run()

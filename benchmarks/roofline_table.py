@@ -1,0 +1,54 @@
+"""§Roofline table: aggregate runs/dryrun/*.json into the per-cell report.
+
+Run `python -m repro.launch.dryrun --all` first (or point --dir at cached
+results).  Emits one CSV row per (arch × shape × mesh) with the three
+roofline terms, the dominant bottleneck, and useful-FLOP fraction.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.bench_util import emit
+
+
+def load_records(dirname: str = "runs/dryrun") -> list:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(dirname: str = "runs/dryrun") -> list:
+    recs = load_records(dirname)
+    if not recs:
+        print("# no dry-run records found; run `python -m repro.launch.dryrun --all`")
+        return []
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh', '-')}"
+        if r.get("status") == "skip":
+            emit(name, 0.0, f"SKIP:{r['reason'][:60]}")
+            continue
+        if r.get("status") != "ok":
+            emit(name, 0.0, f"FAIL:{r.get('error', '?')[:60]}")
+            continue
+        rl = r["roofline"]
+        bound_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        emit(
+            name,
+            bound_s * 1e6,  # modeled step time = dominant roofline term
+            f"compute={rl['compute_s']:.3e}s;memory={rl['memory_s']:.3e}s;"
+            f"collective={rl['collective_s']:.3e}s;dominant={rl['dominant']};"
+            f"useful={rl['useful_fraction']:.3f};"
+            f"roofline_frac={rl['roofline_fraction']:.3f};"
+            f"live_gb={r['live_bytes_per_device']/1e9:.2f};"
+            f"fits16gb={r['fits_16gb']}",
+        )
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark driver: one module per paper table + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Tables ↔ paper:
+  partition_time  — Tables 1–2 (Lanczos vs inverse iteration, RCB pre-pass)
+  weak_scaling    — Table 4 (cube meshes, E/P const, message-size regime)
+  quality         — §8 evaluation + §3 baselines (RSB/RCB/RIB/SFC/random)
+  kernels         — Pallas kernel micro-benches
+  roofline        — §Roofline table from cached dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", default=None,
+                    choices=["partition_time", "weak_scaling", "quality",
+                             "kernels", "roofline"])
+    ap.add_argument("--dryrun-dir", default="runs/dryrun")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    def want(name):
+        return args.only is None or args.only == name
+
+    if want("quality"):
+        from benchmarks import quality
+
+        quality.run(full=args.full)
+    if want("partition_time"):
+        from benchmarks import partition_time
+
+        partition_time.run(full=args.full)
+    if want("weak_scaling"):
+        from benchmarks import weak_scaling
+
+        weak_scaling.run(full=args.full)
+    if want("kernels"):
+        from benchmarks import kernels
+
+        kernels.run(full=args.full)
+    if want("roofline"):
+        from benchmarks import roofline_table
+
+        roofline_table.run(args.dryrun_dir)
+    print(f"# benchmarks completed in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 4 analogue: weak scaling on cube meshes, E/P held constant.
+
+Validates C3 (neighbor counts stay in the SEM range, flat in P) and
+C8 (average message size ≫ m₂ → the volume-dominated regime that motivates
+spectral partitioning at exascale).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.bench_util import emit
+from repro.core import comm_time_model, m2_words, partition_metrics, rsb_partition_mesh
+from repro.mesh import box_mesh, dual_graph
+
+
+def _cube_dims(nelems: int) -> tuple:
+    side = round(nelems ** (1 / 3))
+    return (side, side, max(1, nelems // (side * side)))
+
+
+def run(e_per_p: int = 512, parts_list=(4, 8, 16), full: bool = False) -> list:
+    if full:
+        e_per_p, parts_list = 1000, (8, 16, 32, 64)
+    rows = []
+    for p in parts_list:
+        dims = _cube_dims(e_per_p * p)
+        mesh = box_mesh(*dims)
+        graph = dual_graph(mesh)
+        t0 = time.perf_counter()
+        parts, report = rsb_partition_mesh(mesh, p, method="lanczos",
+                                           pre="rcb", tol=1e-3)
+        dt = time.perf_counter() - t0
+        pm = partition_metrics(graph, parts, p, dofs_per_face=64)
+        ct = comm_time_model(pm)
+        rows.append({
+            "P": p, "E": mesh.nelems, "seconds": dt,
+            "max_nbrs": pm.max_neighbors, "avg_nbrs": pm.avg_neighbors,
+            "avg_msg_words": pm.avg_message_size,
+            "m2_words": ct["m2_words"], "dominated": ct["dominated_by"],
+            "imbalance": pm.imbalance,
+        })
+        emit(
+            f"weak_scaling/P={p}", dt * 1e6,
+            f"E={mesh.nelems};max_nbrs={pm.max_neighbors};"
+            f"avg_nbrs={pm.avg_neighbors:.1f};"
+            f"avg_msg={pm.avg_message_size:.0f}w;m2={ct['m2_words']:.0f}w;"
+            f"regime={ct['dominated_by']};imbalance={pm.imbalance}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

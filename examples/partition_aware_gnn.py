@@ -1,0 +1,52 @@
+"""The paper's technique as the framework's communication optimizer:
+partition a GNN's graph with RSB, shard message passing with shard_map,
+and measure the collective volume vs naive partitions.
+
+Sets up 8 host devices — run as its own process:
+    PYTHONPATH=src python examples/partition_aware_gnn.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.core import partition_metrics, rsb_partition_graph
+from repro.core.rcb import rcb_parts
+from repro.dist.partition_aware import (adjacency_matvec_distributed,
+                                        plan_halo_sharding)
+from repro.mesh.graphs import grid_graph_2d
+
+n_shards = 8
+g = grid_graph_2d(32, 32)
+coords = np.stack(np.meshgrid(np.arange(32), np.arange(32), indexing="ij"),
+                  -1).reshape(-1, 2).astype(float)
+coords = np.concatenate([coords, np.zeros((g.n, 1))], 1)
+
+print(f"graph: {g.n} nodes, {g.nnz // 2} edges, {n_shards} shards")
+print(f"{'partitioner':<12}{'edge cut':>9}{'halo':>6}{'gather words/col':>18}")
+plans = {}
+for name, parts in (
+    ("random", np.random.default_rng(0).permutation(np.arange(g.n) % n_shards)),
+    ("rcb", rcb_parts(coords, n_shards)),
+    ("rsb", rsb_partition_graph(g, n_shards, tol=1e-4)[0]),
+):
+    plan = plan_halo_sharding(g, parts, n_shards)
+    pm = partition_metrics(g, parts, n_shards)
+    plans[name] = plan
+    print(f"{name:<12}{pm.edge_cut:>9.0f}{plan.halo:>6}"
+          f"{plan.collective_words_per_feature:>18}")
+
+# run one REAL distributed message-passing sweep under each plan
+mesh = jax.make_mesh((n_shards,), ("shards",), axis_types=(AxisType.Auto,))
+x = np.random.default_rng(1).normal(size=g.n)
+A = np.zeros((g.n, g.n)); A[g.rows, g.indices] = g.weights
+with jax.set_mesh(mesh):
+    for name, plan in plans.items():
+        y = adjacency_matvec_distributed(plan, mesh, x)
+        err = np.abs(y - A @ x).max()
+        print(f"distributed A·x under {name:<7} plan: max err {err:.2e}")
+print("\nRSB's min-cut objective == minimal all_gather volume: the paper's "
+      "partitioner is the framework's communication optimizer.")

@@ -1,0 +1,32 @@
+"""The NekRS workflow: mesh → partition → element redistribution, with all
+partitioners compared (RSB / RCB / RIB / SFC / random).
+
+    PYTHONPATH=src python examples/partition_mesh.py
+"""
+
+import numpy as np
+
+from repro.core import partition, partition_metrics
+from repro.dist.partition_aware import plan_halo_sharding, scatter_features
+from repro.mesh import dual_graph, pebble_mesh
+
+mesh = pebble_mesh(12, 12, 12, n_pebbles=5, warp=0.15, seed=1)
+graph = dual_graph(mesh)
+nparts = 16
+print(f"pebble-bed-like mesh: {mesh.nelems} elements "
+      f"({(mesh.weights > 1).sum()} 'flow' elements at 2x weight)")
+print(f"{'method':<12}{'cut':>8}{'volume':>9}{'maxnbr':>7}{'halo':>6}{'w-imb':>7}")
+for name in ("rsb", "rcb", "rib", "sfc", "random"):
+    parts = partition(mesh, nparts, partitioner=name)
+    pm = partition_metrics(graph, parts, nparts, weights=mesh.weights)
+    halo = plan_halo_sharding(graph, parts, nparts).halo
+    print(f"{name:<12}{pm.edge_cut:>8.0f}{pm.total_volume:>9.0f}"
+          f"{pm.max_neighbors:>7}{halo:>6}{pm.weighted_imbalance:>7.3f}")
+
+# element redistribution: permute element data into per-rank blocks — this
+# is the 'apply the partition' step a solver performs before timestepping
+parts = partition(mesh, nparts, partitioner="rsb")
+plan = plan_halo_sharding(graph, parts, nparts)
+blocks = scatter_features(plan, mesh.coords)
+print(f"\nredistributed coords into {blocks.shape} per-rank blocks "
+      f"(halo capacity {plan.halo} elements/rank)")

@@ -1,0 +1,11 @@
+"""Serve a small LM with batched requests (prefill + KV-cache decode).
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --steps 32
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""The paper's own workload: parRSB partitioning configurations.
+
+Mesh-size / processor-count grids mirroring the paper's experiments,
+scaled to this container (benchmarks extrapolate; see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ParRSBConfig:
+    name: str = "parrsb"
+    # Table 1–2 analogue: pebble-bed-like mesh, Lanczos vs inverse iteration
+    pebble_dims: tuple = (24, 24, 24)
+    pebble_pebbles: int = 10
+    quality_parts: tuple = (8, 16, 32, 64)
+    # Table 4 analogue: weak scaling on cube meshes, E/P held constant
+    weak_e_per_p: int = 1000
+    weak_parts: tuple = (8, 16, 32, 64, 128)
+    lanczos_window: int = 30
+    max_restarts: int = 50
+    tol: float = 1e-3
+
+
+def make_config() -> ParRSBConfig:
+    return ParRSBConfig()
+
+
+def make_smoke_config() -> ParRSBConfig:
+    return ParRSBConfig(name="parrsb-smoke", pebble_dims=(8, 8, 8),
+                        pebble_pebbles=3, quality_parts=(4,),
+                        weak_e_per_p=64, weak_parts=(4, 8))

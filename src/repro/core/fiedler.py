@@ -1,0 +1,269 @@
+"""Fiedler-vector solver facade: picks Lanczos or inverse iteration.
+
+Adds the practical glue the RSB driver needs:
+  * operator construction from a mesh (gather-scatter) or a graph (ELL),
+  * power-of-two bucketing/padding so the recursion reuses compiled solvers
+    (pad entries are fully decoupled: dummy gids / zero rows — the self-term
+    cancellation makes `L` act as 0 on them),
+  * a dense NumPy path for tiny subproblems (recursion tail),
+  * optional geometric warm start (beyond-paper: seed with the coordinate
+    along the dominant axis instead of noise — see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.amg import amg_setup
+from repro.core.gather_scatter import GSLaplacian, gs_setup, _build
+from repro.core.inverse_iteration import inverse_iteration
+from repro.core.laplacian import EllLaplacian, dense_laplacian_np, ell_laplacian
+from repro.core.lanczos import lanczos_fiedler
+from repro.mesh.graphs import Graph, csr_to_ell
+
+_DENSE_CUTOFF = 192
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+@dataclasses.dataclass
+class FiedlerResult:
+    vector: np.ndarray     # (n,) float — Fiedler components (real entries only)
+    eigenvalue: float
+    residual: float
+    iterations: int        # restarts (lanczos) or outer iters (inverse)
+    method: str
+
+
+def _padded_gs_laplacian(vert_gid: np.ndarray, n_pad: int) -> GSLaplacian:
+    """Gather-scatter Laplacian padded to n_pad elements (decoupled tail)."""
+    E, K = vert_gid.shape
+    uniq, inv = np.unique(vert_gid, return_inverse=True)
+    ng = uniq.size
+    gid = np.empty((n_pad, K), dtype=np.int64)
+    gid[:E] = inv.reshape(E, K)
+    if n_pad > E:
+        # one fresh dummy id per padded slot — no coupling, self-cancelling
+        gid[E:] = (ng + np.arange((n_pad - E) * K)).reshape(n_pad - E, K)
+    handle_gid = jnp.asarray(gid.astype(np.int32))
+    from repro.core.gather_scatter import GSHandle
+
+    h = GSHandle(gid=handle_gid, n_global=int(gid.max()) + 1)
+    return _build([(1.0, h)], n_pad)
+
+
+def _padded_ell_laplacian(graph: Graph, n_pad: int, width_pad: int) -> EllLaplacian:
+    cols, vals = csr_to_ell(graph, max_row=None)
+    n, w = cols.shape
+    if width_pad < w:
+        raise ValueError("width_pad below max degree")
+    C = np.tile(np.arange(n_pad, dtype=np.int64)[:, None], (1, width_pad))
+    V = np.zeros((n_pad, width_pad), dtype=np.float64)
+    C[:n, :w] = cols
+    V[:n, :w] = vals
+    deg = np.zeros(n_pad, dtype=np.float64)
+    np.add.at(deg, graph.rows, graph.weights)
+    return EllLaplacian(
+        cols=jnp.asarray(C.astype(np.int32)),
+        vals=jnp.asarray(V.astype(np.float32)),
+        diag=jnp.asarray(deg.astype(np.float32)),
+        n=n_pad,
+    )
+
+
+def _dense_fiedler(L: np.ndarray) -> tuple[np.ndarray, float]:
+    w, v = np.linalg.eigh(L)
+    return v[:, 1], float(w[1])
+
+
+def fiedler_from_graph(
+    graph: Graph,
+    *,
+    method: str = "lanczos",
+    order: np.ndarray | None = None,
+    seed: int = 0,
+    warm: np.ndarray | None = None,
+    tol: float = 1e-3,
+    window: int = 30,
+    max_restarts: int = 50,
+    pad: bool = True,
+    use_kernel: bool = False,
+) -> FiedlerResult:
+    """Fiedler vector of an assembled graph Laplacian."""
+    n = graph.n
+    if n <= _DENSE_CUTOFF:
+        vec, lam = _dense_fiedler(dense_laplacian_np(graph))
+        return FiedlerResult(vec, lam, 0.0, 0, "dense")
+
+    n_pad = next_pow2(n) if pad else n
+    width = int(graph.degrees.max()) if graph.nnz else 1
+    width_pad = next_pow2(max(width, 2)) if pad else width
+    op = _padded_ell_laplacian(graph, n_pad, width_pad)
+    if use_kernel:
+        op = dataclasses.replace(op, use_kernel=True)
+    mask = jnp.asarray((np.arange(n_pad) < n).astype(np.float32))
+    b0 = None
+    if warm is not None:
+        b0 = jnp.asarray(np.pad(warm.astype(np.float32), (0, n_pad - n)))
+
+    if method == "lanczos":
+        y, info = lanczos_fiedler(
+            op.apply, n_pad, mask=mask, key=jax.random.PRNGKey(seed), b0=b0,
+            window=window, max_restarts=max_restarts, tol=tol,
+        )
+        iters = info.restarts
+        lam, res = info.eigenvalue, info.residual
+    elif method == "inverse":
+        pre = amg_setup(graph, order=order)
+        # AMG hierarchy is sized to the real graph; wrap to ignore padding.
+        def precond(r):
+            u = pre(r[:n])
+            return jnp.pad(u, (0, n_pad - n))
+
+        y, info = inverse_iteration(
+            op.apply, n_pad, precond=precond, mask=mask,
+            key=jax.random.PRNGKey(seed), b0=b0, tol=tol,
+        )
+        iters = info.outer_iters
+        lam, res = info.eigenvalue, info.residual
+    else:
+        raise ValueError(f"unknown fiedler method: {method}")
+    return FiedlerResult(np.asarray(y[:n]), lam, res, iters, method)
+
+
+def fiedler_from_mesh(
+    vert_gid: np.ndarray,
+    *,
+    method: str = "lanczos",
+    graph_for_amg: Graph | None = None,
+    order: np.ndarray | None = None,
+    seed: int = 0,
+    warm: np.ndarray | None = None,
+    tol: float = 1e-3,
+    window: int = 30,
+    max_restarts: int = 50,
+    pad: bool = True,
+) -> FiedlerResult:
+    """Fiedler vector via the matrix-free gather-scatter Laplacian (paper §5).
+
+    `graph_for_amg` (the assembled dual graph) is only needed for
+    method="inverse" — the AMG hierarchy requires assembled coarse levels
+    (paper §7), while Lanczos runs fully matrix-free.
+    """
+    E = vert_gid.shape[0]
+    if E <= _DENSE_CUTOFF:
+        from repro.mesh.graphs import dual_graph_from_incidence
+
+        g = dual_graph_from_incidence(vert_gid, int(vert_gid.max()) + 1, E)
+        vec, lam = _dense_fiedler(dense_laplacian_np(g))
+        return FiedlerResult(vec, lam, 0.0, 0, "dense")
+
+    n_pad = next_pow2(E) if pad else E
+    op = _padded_gs_laplacian(vert_gid, n_pad)
+    mask = jnp.asarray((np.arange(n_pad) < E).astype(np.float32))
+    b0 = None
+    if warm is not None:
+        b0 = jnp.asarray(np.pad(warm.astype(np.float32), (0, n_pad - E)))
+
+    if method == "lanczos":
+        y, info = lanczos_fiedler(
+            op.apply, n_pad, mask=mask, key=jax.random.PRNGKey(seed), b0=b0,
+            window=window, max_restarts=max_restarts, tol=tol,
+        )
+        iters, lam, res = info.restarts, info.eigenvalue, info.residual
+    elif method == "inverse":
+        if graph_for_amg is None:
+            raise ValueError("inverse iteration needs the assembled dual graph for AMG")
+        pre = amg_setup(graph_for_amg, order=order)
+
+        def precond(r):
+            u = pre(r[:E])
+            return jnp.pad(u, (0, n_pad - E))
+
+        y, info = inverse_iteration(
+            op.apply, n_pad, precond=precond, mask=mask,
+            key=jax.random.PRNGKey(seed), b0=b0, tol=tol,
+        )
+        iters, lam, res = info.outer_iters, info.eigenvalue, info.residual
+    else:
+        raise ValueError(f"unknown fiedler method: {method}")
+    return FiedlerResult(np.asarray(y[:E]), lam, res, iters, method)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate Fiedler pairs (paper §9 future work, implemented here)
+# ---------------------------------------------------------------------------
+
+def fiedler_pair_from_graph(
+    graph: Graph,
+    *,
+    seed: int = 0,
+    tol: float = 1e-4,
+    window: int = 40,
+    max_restarts: int = 60,
+) -> tuple[np.ndarray, np.ndarray, float, float]:
+    """(y₂, y₃, λ₂, λ₃): the two smallest nontrivial eigenpairs.
+
+    Paper §9: on topologically-checkerboard graphs λ₂ has multiplicity 2
+    and single-vector Lanczos returns an arbitrary member of the eigenspace
+    whose cut quality varies (45° cuts expose ≈2N faces vs N).  We find the
+    second vector by SPECTRAL DEFLATION: run Lanczos again on
+    `L' = L + σ·y₂y₂ᵀ` (σ > λ_max pushes y₂'s eigenvalue out of the way),
+    which needs no changes to the Lanczos kernel itself.
+    """
+    res1 = fiedler_from_graph(graph, method="lanczos", seed=seed, tol=tol,
+                              window=window, max_restarts=max_restarts)
+    y1 = res1.vector / max(np.linalg.norm(res1.vector), 1e-30)
+
+    n = graph.n
+    n_pad = next_pow2(n)
+    width = int(graph.degrees.max()) if graph.nnz else 1
+    op = _padded_ell_laplacian(graph, n_pad, next_pow2(max(width, 2)))
+    mask = jnp.asarray((np.arange(n_pad) < n).astype(np.float32))
+    y1p = jnp.asarray(np.pad(y1.astype(np.float32), (0, n_pad - n)))
+    # Gershgorin bound on λ_max; σ above it exiles y₂'s eigenvalue
+    sigma = 4.0 * float(np.max(np.asarray(op.diag))) + 1.0
+
+    def deflated(x):
+        return op.apply(x) + sigma * y1p * jnp.vdot(y1p, x)
+
+    y, info = lanczos_fiedler(
+        deflated, n_pad, mask=mask, key=jax.random.PRNGKey(seed + 1),
+        window=window, max_restarts=max_restarts, tol=tol,
+    )
+    y2 = np.asarray(y[:n])
+    y2 = y2 - y1 * float(y1 @ y2)          # exact orthogonality polish
+    y2 /= max(np.linalg.norm(y2), 1e-30)
+    return y1, y2, res1.eigenvalue, info.eigenvalue
+
+
+def best_cut_in_pair(
+    graph: Graph,
+    y1: np.ndarray,
+    y2: np.ndarray,
+    *,
+    n_theta: int = 16,
+    weights: np.ndarray | None = None,
+) -> tuple[np.ndarray, float, float]:
+    """Paper §9: sweep θ over span{y₂, y₃} and keep the balanced bisection
+    with the minimum ω-cut.  Returns (fiedler-like vector, θ, cut)."""
+    w = np.ones(graph.n) if weights is None else np.asarray(weights, np.float64)
+    rows, cols, ew = graph.rows, graph.indices, graph.weights
+    best = (None, 0.0, np.inf)
+    for theta in np.linspace(0.0, np.pi, n_theta, endpoint=False):
+        v = np.cos(theta) * y1 + np.sin(theta) * y2
+        order = np.argsort(v, kind="stable")
+        half = np.zeros(graph.n, dtype=bool)
+        cw = np.cumsum(w[order])
+        k = int(np.searchsorted(cw - w[order] / 2, cw[-1] / 2)) + 1
+        half[order[:k]] = True
+        cut = float(ew[half[rows] != half[cols]].sum() / 2.0)
+        if cut < best[2]:
+            best = (v, float(theta), cut)
+    return best

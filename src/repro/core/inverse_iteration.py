@@ -1,0 +1,124 @@
+"""Inverse power iteration for the Fiedler vector (paper Algorithm 2 + §7).
+
+Outer loop: orthogonalize b against 1, normalize, solve `L y = b` with
+AMG-preconditioned flexcg, set b ← y.  Two parRSB augmentations reproduced:
+
+* **Augmented projection**: the initial guess for each inner solve is the
+  L-orthogonal projection of b onto the span of the previous outer iterates
+  (a small Gram solve) — the "approximate Krylov-subspace projection of the
+  inverse iterates" of the paper.  This typically cuts inner iterations by
+  2–4× after the first few outer steps.
+* **Single-iteration stop**: once flexcg (whose first direction is
+  unpreconditioned) returns in one iteration, the Krylov space is invariant
+  → b is an eigenvector → stop the outer loop.
+
+The outer loop is a host loop (a handful of iterations, paper reports ~6);
+each inner solve is a single jitted while_loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flexcg import CGResult, _project_out_ones, flexcg
+
+
+@dataclasses.dataclass
+class InverseIterInfo:
+    outer_iters: int
+    inner_iters: list
+    eigenvalue: float
+    residual: float
+
+
+def _rayleigh(op, y, mask):
+    Ly = op(y)
+    num = jnp.sum(y * Ly)
+    den = jnp.maximum(jnp.sum(y * y), 1e-30)
+    lam = num / den
+    res = jnp.sqrt(jnp.sum((Ly - lam * y) ** 2) / den)
+    return lam, res
+
+
+def inverse_iteration(
+    op: Callable[[jax.Array], jax.Array],
+    n: int,
+    *,
+    precond: Callable[[jax.Array], jax.Array] | None = None,
+    mask: jax.Array | None = None,
+    key: jax.Array | None = None,
+    b0: jax.Array | None = None,
+    max_outer: int = 30,
+    inner_tol: float = 1e-4,
+    inner_maxiter: int = 200,
+    tol: float = 1e-3,
+    proj_window: int = 5,
+) -> tuple[jax.Array, InverseIterInfo]:
+    """Return (y₂ approximation, info)."""
+    mask = jnp.ones((n,), jnp.float32) if mask is None else mask.astype(jnp.float32)
+    if b0 is None:
+        key = jax.random.PRNGKey(0) if key is None else key
+        b = jax.random.normal(key, (n,), jnp.float32)
+    else:
+        b = b0.astype(jnp.float32)
+    b = _project_out_ones(b, mask)
+    b = b / jnp.maximum(jnp.linalg.norm(b), 1e-30)
+
+    solve = jax.jit(
+        lambda bb, xx0: flexcg(
+            op, bb, precond=precond, x0=xx0, mask=mask,
+            tol=inner_tol, maxiter=inner_maxiter,
+        )
+    )
+    opj = jax.jit(op)
+
+    ys: list[jax.Array] = []     # previous iterates (projection basis)
+    lys: list[jax.Array] = []    # L @ previous iterates
+    inner_counts = []
+    lam = jnp.asarray(0.0)
+    res = jnp.asarray(jnp.inf)
+    outer = 0
+    for outer in range(1, max_outer + 1):
+        # Augmented projection: x0 = Y (Yᵀ L Y)⁻¹ Yᵀ b.
+        if ys:
+            Y = jnp.stack(ys, axis=1)        # (n, m)
+            W = jnp.stack(lys, axis=1)       # (n, m)
+            G = Y.T @ W                      # (m, m) Gram in L-inner product
+            rhs = Y.T @ b
+            coef = jnp.linalg.solve(G + 1e-12 * jnp.eye(G.shape[0]), rhs)
+            x0 = Y @ coef
+        else:
+            x0 = None
+        result: CGResult = solve(b, x0 if x0 is not None else jnp.zeros_like(b))
+        y = result.x
+        inner_counts.append(int(result.iters))
+
+        ynorm = jnp.maximum(jnp.linalg.norm(y), 1e-30)
+        b = _project_out_ones(y / ynorm, mask)
+        b = b / jnp.maximum(jnp.linalg.norm(b), 1e-30)
+        lam, res = _rayleigh(opj, b, mask)
+
+        ys.append(b)
+        lys.append(opj(b))
+        if len(ys) > proj_window:
+            ys.pop(0)
+            lys.pop(0)
+
+        if float(res) <= tol * max(float(lam), 1e-12):
+            break
+        # Paper's stopping signal: flexcg converged in a single iteration.
+        if outer > 1 and int(result.iters) <= 1:
+            break
+
+    info = InverseIterInfo(
+        outer_iters=outer,
+        inner_iters=inner_counts,
+        eigenvalue=float(lam),
+        residual=float(res),
+    )
+    return b, info

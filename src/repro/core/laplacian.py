@@ -1,0 +1,76 @@
+"""Assembled Laplacian operators (ELL / CSR) + dense oracle.
+
+The finest level of the paper's multigrid uses the gather-scatter Laplacian
+(`repro.core.gather_scatter`); coarser levels and generic-graph inputs use an
+assembled form (paper §7: "we generate L₀, L₁, L₂, … as CSR matrices").  On
+TPU we store the padded **ELL** layout — static shape, row-contiguous,
+VMEM-tileable — and the matvec is the Pallas `ell_spmv` kernel with a pure
+jnp fallback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mesh.graphs import Graph, csr_to_ell
+
+
+@dataclasses.dataclass(frozen=True)
+class EllLaplacian:
+    """L x = deg ⊙ x − A x with A in padded ELL form.
+
+    cols/vals: (n, width).  Padding entries have val 0 (col = row id).
+    """
+
+    cols: jax.Array    # (n, width) int32
+    vals: jax.Array    # (n, width) float32 — adjacency weights
+    diag: jax.Array    # (n,) float32 — Σ_j ω_ij (true Laplacian diagonal)
+    n: int
+    use_kernel: bool = False
+
+    def __hash__(self):
+        return id(self)
+
+    def adj_apply(self, x: jax.Array) -> jax.Array:
+        if self.use_kernel:
+            from repro.kernels.ell_spmv import ops as _ops
+
+            return _ops.ell_spmv(self.cols, self.vals, x)
+        return (self.vals * jnp.take(x, self.cols, axis=-1)).sum(-1)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        return self.diag * x - self.adj_apply(x)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.apply(x)
+
+
+def ell_laplacian(graph: Graph, *, use_kernel: bool = False) -> EllLaplacian:
+    cols, vals = csr_to_ell(graph)
+    deg = np.zeros(graph.n, dtype=np.float64)
+    np.add.at(deg, graph.rows, graph.weights)
+    return EllLaplacian(
+        cols=jnp.asarray(cols.astype(np.int32)),
+        vals=jnp.asarray(vals.astype(np.float32)),
+        diag=jnp.asarray(deg.astype(np.float32)),
+        n=graph.n,
+        use_kernel=use_kernel,
+    )
+
+
+def dense_laplacian_np(graph: Graph) -> np.ndarray:
+    """Dense float64 Laplacian — the test oracle."""
+    A = np.zeros((graph.n, graph.n), dtype=np.float64)
+    A[graph.rows, graph.indices] = graph.weights
+    return np.diag(A.sum(1)) - A
+
+
+def fiedler_oracle_np(graph: Graph) -> tuple[float, np.ndarray]:
+    """(λ₂, y₂) by dense eigendecomposition — ground truth for small graphs."""
+    L = dense_laplacian_np(graph)
+    w, v = np.linalg.eigh(L)
+    return float(w[1]), v[:, 1]

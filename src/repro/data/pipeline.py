@@ -1,0 +1,41 @@
+"""Host-side double-buffered prefetcher (compute/IO overlap).
+
+JAX dispatch is async; overlapping the *host* data generation with device
+compute needs a thread.  `Prefetcher` keeps `depth` batches in flight —
+the standard input-pipeline pattern for TPU training loops.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+
+class Prefetcher:
+    def __init__(self, iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._src = iterator
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for item in self._src:
+                if self._stop.is_set():
+                    return
+                self._q.put(item)
+        finally:
+            self._q.put(StopIteration)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is StopIteration:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()

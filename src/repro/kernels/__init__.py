@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+ell_spmv/         Laplacian matvec in transposed-ELL layout — the paper's
+                  hot loop (Lanczos / CG / AMG smoothing are all matvec-bound).
+embedding_bag/    recsys lookup-reduce (gather rows + segment-sum).
+flash_attention/  online-softmax attention for the LM archs.
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
+wrapper; interpret=True on CPU), ref.py (pure-jnp oracle used by tests).
+"""

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: sparse matvec in transposed-ELL (ELLPACK-T) layout.
+
+TPU adaptation of the paper's Laplacian hot loop (DESIGN.md §2): instead of
+CSR rows (GPU-style one-thread-per-row), the adjacency is stored
+column-major ELL — `cols_t/vals_t : (w, n)` — so the *node* axis lands on
+the 128-wide vector lanes and each of the `w` neighbor slots is one fully
+vectorized multiply-gather-accumulate sweep.  The dense vector `x` stays
+resident in VMEM (the kernel targets AMG coarse levels and per-shard
+subgraphs, n ≤ ~256k: 1 MB of fp32 — comfortably inside the 16 MB VMEM of
+a v5e core); rows are streamed block-by-block.
+
+Grid: n / block_n column blocks.  Block shapes: (w, block_n) for cols/vals,
+(block_n,) for the output; x is broadcast (un-blocked) into VMEM once.
+block_n is a multiple of 128 (lane width); w is the padded max degree.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(x_ref, cols_ref, vals_ref, out_ref):
+    x = x_ref[...]                     # (n,) resident vector
+    cols = cols_ref[...]               # (w, bn)
+    vals = vals_ref[...]               # (w, bn)
+    gathered = jnp.take(x, cols, axis=0)          # (w, bn) vectorized gather
+    out_ref[...] = (vals.astype(jnp.float32) * gathered.astype(jnp.float32)).sum(
+        axis=0
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def ell_spmv_pallas(
+    cols_t: jax.Array,    # (w, n) int32
+    vals_t: jax.Array,    # (w, n)
+    x: jax.Array,         # (n,)
+    *,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    w, n = cols_t.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),            # x: whole vector
+            pl.BlockSpec((w, block_n), lambda i: (0, i)),  # cols block
+            pl.BlockSpec((w, block_n), lambda i: (0, i)),  # vals block
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x, cols_t, vals_t)

@@ -1,0 +1,42 @@
+"""Public jit'd wrapper for the ELL SpMV kernel (CPU → interpret mode)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ell_spmv.kernel import ell_spmv_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_block(n: int) -> int:
+    for b in (1024, 512, 256, 128):
+        if n % b == 0:
+            return b
+    return 0
+
+
+def ell_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
+    """A·x with row-major ELL inputs (n, w) — transposes to ELLPACK-T and
+    dispatches to the Pallas kernel (interpret mode off-TPU), padding n to a
+    lane-aligned block size."""
+    n, w = cols.shape
+    block = _pick_block(n)
+    if block == 0:
+        n_pad = -(-n // 128) * 128
+        cols = jnp.pad(cols, ((0, n_pad - n), (0, 0)))
+        vals = jnp.pad(vals, ((0, n_pad - n), (0, 0)))
+        xp = jnp.pad(x, (0, n_pad - n))
+        out = ell_spmv_pallas(
+            cols.T, vals.T, xp, block_n=128, interpret=not _on_tpu()
+        )
+        return out[:n]
+    return ell_spmv_pallas(cols.T, vals.T, x, block_n=block, interpret=not _on_tpu())
+
+
+def lap_apply(cols: jax.Array, vals: jax.Array, diag: jax.Array, x: jax.Array):
+    return diag * x - ell_spmv(cols, vals, x)

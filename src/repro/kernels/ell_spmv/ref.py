@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the transposed-ELL Laplacian matvec."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(cols_t: jnp.ndarray, vals_t: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """A·x with A in transposed ELL: cols_t/vals_t (w, n); pad val = 0.
+
+    out[i] = Σ_k vals_t[k, i] · x[cols_t[k, i]]
+    """
+    return (vals_t * jnp.take(x, cols_t, axis=0)).sum(axis=0)
+
+
+def lap_apply_ref(cols_t, vals_t, diag, x):
+    """L·x = diag ⊙ x − A·x."""
+    return diag * x - ell_spmv_ref(cols_t, vals_t, x)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: embedding-bag (gather rows + sum per sorted segment).
+
+The table lives in HBM (recsys tables are 10⁶–10⁹ rows — never VMEM
+resident).  The canonical TPU pattern is **scalar-prefetch row indexing**:
+`PrefetchScalarGridSpec` passes the int32 `indices`/`segments` arrays ahead
+of the grid so the BlockSpec `index_map` can select, per grid step, the
+single table row `(indices[i], :)` to DMA into VMEM, and the *output* block
+`(segments[i], :)` to accumulate into.  Because segments are sorted, the
+output block is revisited on consecutive steps (Pallas keeps it resident)
+and initialized exactly when the segment id changes.
+
+Block shapes: (1, d) table row, (1, d) output row — d padded to a multiple
+of 128 lanes by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, seg_ref, wgt_ref, row_ref, out_ref):
+    i = pl.program_id(0)
+    seg = seg_ref[i]
+    is_first = jnp.where(i == 0, True, seg_ref[jnp.maximum(i - 1, 0)] != seg)
+    row = row_ref[...].astype(jnp.float32) * wgt_ref[i].astype(jnp.float32)
+
+    @pl.when(is_first)
+    def _init():
+        out_ref[...] = row.astype(out_ref.dtype)
+
+    @pl.when(jnp.logical_not(is_first))
+    def _acc():
+        out_ref[...] = (out_ref[...].astype(jnp.float32) + row).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bags", "interpret"))
+def embedding_bag_pallas(
+    table: jax.Array,      # (V, d)
+    indices: jax.Array,    # (nnz,) int32
+    segments: jax.Array,   # (nnz,) int32, sorted ascending
+    weights: jax.Array,    # (nnz,) per-sample weights
+    *,
+    n_bags: int,
+    interpret: bool = False,
+) -> jax.Array:
+    V, d = table.shape
+    nnz = indices.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nnz,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx, seg, wgt: (idx[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx, seg, wgt: (seg[i], 0)),
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, d), table.dtype),
+        interpret=interpret,
+    )(indices, segments, weights, table)

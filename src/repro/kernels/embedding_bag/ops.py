@@ -1,0 +1,37 @@
+"""Public wrapper: sorts segments if needed, pads dim to 128 lanes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def embedding_bag(
+    table: jax.Array,
+    indices: jax.Array,
+    segments: jax.Array,
+    n_bags: int,
+    *,
+    weights: jax.Array | None = None,
+    assume_sorted: bool = True,
+) -> jax.Array:
+    V, d = table.shape
+    nnz = indices.shape[0]
+    if weights is None:
+        weights = jnp.ones((nnz,), table.dtype)
+    if not assume_sorted:
+        order = jnp.argsort(segments)
+        indices, segments, weights = indices[order], segments[order], weights[order]
+    d_pad = -(-d // 128) * 128
+    tbl = jnp.pad(table, ((0, 0), (0, d_pad - d))) if d_pad != d else table
+    out = embedding_bag_pallas(
+        tbl, indices.astype(jnp.int32), segments.astype(jnp.int32), weights,
+        n_bags=n_bags, interpret=not _on_tpu(),
+    )
+    return out[:, :d]

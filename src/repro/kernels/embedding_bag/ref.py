@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array, segments: jax.Array,
+                      n_bags: int, weights: jax.Array | None = None) -> jax.Array:
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    return jax.ops.segment_sum(rows, segments, num_segments=n_bags)

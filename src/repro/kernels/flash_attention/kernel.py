@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+Grid: (B·Hkv·G, nQ, nK) with the KV axis innermost, so the output block
+(block_q, D) and the fp32 scratch accumulators (m, l, acc) persist in VMEM
+across the KV sweep (Pallas revisits the same out block sequentially).
+Block shapes — q: (block_q, D), k/v: (block_k, D) — are MXU-friendly
+(D ∈ {64, 128}; block_q/block_k multiples of 128 recommended on hardware).
+
+Causal handling: KV blocks entirely above the diagonal are skipped via
+`pl.when` (no FLOPs, no DMA use); the diagonal block applies the triangular
+mask.  Queries are end-aligned with keys (decode convention), matching
+`ref.attention_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, q_offset, kv_len, block_q, block_k, n_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + q_offset        # global key-aligned q positions
+    k_start = ki * block_k
+
+    def compute():
+        q = q_ref[0]                          # (block_q, D)
+        k = k_ref[0]                          # (block_k, D)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                             # (block_q, block_k)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos < kv_len                     # mask padded tail keys
+        if causal:
+            valid = jnp.logical_and(valid, qpos >= kpos)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(axis=1)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    in_range = k_start < kv_len
+    if causal:
+        # skip blocks strictly above the causal diagonal or past kv_len
+        needed = jnp.logical_and(k_start <= q_start + block_q - 1, in_range)
+    else:
+        needed = in_range
+    pl.when(needed)(compute)
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "kv_len", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,    # (B, Sq, H, D) — may include padded tail queries
+    k: jax.Array,    # (B, Skv, Hkv, D) — may include padded tail keys
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int | None = None,   # real-position offset of query 0
+    kv_len: int | None = None,     # number of REAL keys (≤ Skv)
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    n_q, n_k = Sq // block_q, Skv // block_k
+    kv_len = Skv if kv_len is None else kv_len
+    q_offset = (kv_len - Sq) if q_offset is None else q_offset
+
+    # fold heads: q → (B·Hkv·G, Sq, D); k/v → (B·Hkv, Skv, D)
+    qf = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 3, 1, 4).reshape(
+        B * Hkv * G, Sq, D
+    )
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=1.0 / np.sqrt(D),
+        causal=causal,
+        q_offset=q_offset,
+        kv_len=kv_len,
+        block_q=block_q,
+        block_k=block_k,
+        n_k=n_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv * G, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda h, qi, ki, g=G: (h // g, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda h, qi, ki, g=G: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv * G, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q,), jnp.float32),      # running sum l
+            pltpu.VMEM((block_q, D), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hkv, G, Sq, D).transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)

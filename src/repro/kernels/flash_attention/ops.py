@@ -1,0 +1,42 @@
+"""Public wrapper: pads sequences (at the tail) to block multiples with
+explicit real-length masking, dispatches to the Pallas kernel (interpret
+mode off-TPU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Causal GQA attention, queries end-aligned with keys (ref.py semantics)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Skv))
+    sq_pad = -(-Sq // bq) * bq
+    sk_pad = -(-Skv // bk) * bk
+    if sq_pad != Sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - Sq), (0, 0), (0, 0)))
+    if sk_pad != Skv:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad - Skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad - Skv), (0, 0), (0, 0)))
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, q_offset=Skv - Sq, kv_len=Skv,
+        block_q=bq, block_k=bk, interpret=not _on_tpu(),
+    )
+    return out[:, :Sq]

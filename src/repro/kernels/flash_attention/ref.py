@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _softmax(s):
+    m = s.max(-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / e.sum(-1, keepdims=True)
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D); H = G·Hkv.  fp32 softmax.
+
+    Queries are end-aligned with keys (decode convention: the last query
+    attends to every key).
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) / np.sqrt(D)
+    if causal:
+        Skv = k.shape[1]
+        qpos = jnp.arange(Sq) + (Skv - Sq)
+        mask = qpos[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = _softmax(s)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(q.dtype), v)
+    return o.reshape(B, Sq, H, D)

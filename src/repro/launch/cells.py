@@ -1,0 +1,465 @@
+"""Cell builder: one (architecture × shape × mesh) → jit-able step.
+
+`build_cell` returns everything the dry-run needs: the step function,
+abstract inputs (`input_specs()` — ShapeDtypeStructs, NO allocation),
+in/out PartitionSpecs, and the MODEL_FLOPS accounting for §Roofline.
+
+Node/edge counts of GNN cells are padded up to a multiple of the device
+count (mask arrays preserve semantics) — recorded in `Cell.notes`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import ArchDef, ShapeCell
+from repro.dist.sharding import (
+    MeshRules,
+    batch_specs_lm,
+    cache_specs_lm,
+    gnn_rules,
+    lm_rules,
+    param_specs_lm,
+    recsys_rules,
+)
+from repro.models.common import NO_SHARD
+from repro.models.gnn.common import GraphBatch
+from repro.train.optimizer import AdamWConfig, abstract_opt_state, adamw_update
+
+OPT_CFG = AdamWConfig(lr=1e-4)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable                 # positional args matching abstract_args
+    abstract_args: tuple
+    in_specs: tuple
+    out_specs: Any               # None → infer
+    model_flops: float           # useful-math FLOPs per step (6ND etc.)
+    notes: str = ""
+
+    def donate(self):
+        """Donated arg indices (params/opt/cache buffers) for memory truth."""
+        if self.kind == "train":
+            return (0, 1)
+        if self.kind == "decode":
+            return (1,)
+        return ()
+
+
+def _pad_to(x: int, m: int) -> int:
+    return int(-(-x // m) * m)
+
+
+def _n_devices(mesh) -> int:
+    return int(np.prod(mesh.devices.shape))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_train_cell(arch: ArchDef, cell: ShapeCell, mesh, unroll: bool = False,
+                   seq_shard: bool = True, moe_impl: str | None = None,
+                   microbatch: int = 1) -> Cell:
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(arch.make_config(), unroll=unroll)
+    if moe_impl and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, impl=moe_impl))
+    rules = lm_rules(mesh, seq_shard=seq_shard)
+    B, S = cell["global_batch"], cell["seq_len"]
+    params_abs = T.abstract_params(cfg)
+    opt_abs = abstract_opt_state(params_abs)
+    batch_abs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+    def step(params, opt_state, batch):
+        if microbatch > 1:
+            # gradient accumulation: activations live for ONE microbatch
+            mb = {k: v.reshape(microbatch, B // microbatch, S)
+                  for k, v in batch.items()}
+
+            def acc(carry, mbatch):
+                loss_sum, gsum = carry
+                l, g = jax.value_and_grad(
+                    lambda p: T.loss_fn(cfg, p, mbatch, rules)
+                )(params)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (loss_sum + l, gsum), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), zeros), mb)
+            loss = loss / microbatch
+            grads = jax.tree_util.tree_map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: T.loss_fn(cfg, p, batch, rules)
+            )(params)
+        params, opt_state, gnorm = adamw_update(OPT_CFG, grads, opt_state, params)
+        return params, opt_state, loss
+
+    pspec = param_specs_lm(cfg, params_abs, mesh)
+    rules.layer_specs = pspec["layers"]
+    ospec = {"m": pspec, "v": pspec, "count": P()}
+    bspec = batch_specs_lm(mesh)
+    n_active = cfg.n_active_params()
+    return Cell(
+        arch_id=arch.arch_id, shape_name=cell.name, kind="train",
+        fn=step, abstract_args=(params_abs, opt_abs, batch_abs),
+        in_specs=(pspec, ospec, bspec), out_specs=(pspec, ospec, P()),
+        model_flops=6.0 * n_active * B * S,
+        notes=f"N_active={n_active:.3e}",
+    )
+
+
+def _lm_prefill_cell(arch: ArchDef, cell: ShapeCell, mesh, unroll: bool = False) -> Cell:
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(arch.make_config(), unroll=unroll)
+    rules = lm_rules(mesh)
+    B, S = cell["global_batch"], cell["seq_len"]
+    params_abs = T.abstract_params(cfg)
+    tokens_abs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    def step(params, tokens):
+        return T.prefill(cfg, params, tokens, rules)
+
+    pspec = param_specs_lm(cfg, params_abs, mesh)
+    rules.layer_specs = pspec["layers"]
+    cspec = cache_specs_lm(cfg, mesh)
+    names = tuple(mesh.axis_names)
+    data = tuple(a for a in ("pod", "data") if a in names)
+    n_active = cfg.n_active_params()
+    attn = 4.0 * B * S * S * cfg.n_heads * cfg.d_head / 2  # causal half
+    return Cell(
+        arch_id=arch.arch_id, shape_name=cell.name, kind="prefill",
+        fn=step, abstract_args=(params_abs, tokens_abs),
+        in_specs=(pspec, P(data, None)),
+        out_specs=(P(data, None, "model"), cspec),
+        model_flops=2.0 * n_active * B * S + attn,
+        notes=f"N_active={n_active:.3e}",
+    )
+
+
+def _lm_decode_cell(arch: ArchDef, cell: ShapeCell, mesh, unroll: bool = False) -> Cell:
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(arch.make_config(), unroll=unroll)
+    rules = lm_rules(mesh)
+    B, S = cell["global_batch"], cell["seq_len"]
+    params_abs = T.abstract_params(cfg)
+    cache_abs = T.abstract_cache(cfg, B, S)
+    tokens_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(params, cache, tokens, pos):
+        return T.decode_step(cfg, params, cache, tokens, pos, rules)
+
+    pspec = param_specs_lm(cfg, params_abs, mesh)
+    rules.layer_specs = pspec["layers"]
+    cspec = cache_specs_lm(cfg, mesh)
+    names = tuple(mesh.axis_names)
+    data = tuple(a for a in ("pod", "data") if a in names)
+    n_active = cfg.n_active_params()
+    attn = 4.0 * B * S * cfg.n_heads * cfg.d_head
+    return Cell(
+        arch_id=arch.arch_id, shape_name=cell.name, kind="decode",
+        fn=step, abstract_args=(params_abs, cache_abs, tokens_abs, pos_abs),
+        in_specs=(pspec, cspec, P(data, None), P()),
+        out_specs=(P(data, None, "model"), cspec),
+        model_flops=2.0 * n_active * B + attn,
+        notes=f"N_active={n_active:.3e} kv_cache_tokens={S}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_batch_abstract(cell: ShapeCell, mesh, *, d_feat: int,
+                        needs_geometry: bool, d_out: int,
+                        energy_targets: bool | None = None):
+    if energy_targets is None:
+        energy_targets = needs_geometry
+    if cell.name == "molecule":
+        needs_geometry = True         # molecules always carry positions
+        d_feat = max(d_feat, 4)       # synthesized node features if absent
+    D = _n_devices(mesh)
+    if cell.name == "molecule":
+        n_nodes = cell["n_nodes"] * cell["batch"]
+        n_edges = cell["n_edges"] * cell["batch"]
+        n_graphs = cell["batch"]
+    elif cell.name == "minibatch_lg":
+        n_nodes, n_edges, n_graphs = cell["sub_nodes"], cell["sub_edges"], 1
+    else:
+        n_nodes, n_edges, n_graphs = cell["n_nodes"], cell["n_edges"], 1
+    n_pad = _pad_to(n_nodes, D)
+    e_pad = _pad_to(n_edges, D)
+    f32, i32 = jnp.float32, jnp.int32
+    batch = GraphBatch(
+        node_feat=jax.ShapeDtypeStruct((n_pad, d_feat), f32),
+        edge_src=jax.ShapeDtypeStruct((e_pad,), i32),
+        edge_dst=jax.ShapeDtypeStruct((e_pad,), i32),
+        node_mask=jax.ShapeDtypeStruct((n_pad,), f32),
+        edge_mask=jax.ShapeDtypeStruct((e_pad,), f32),
+        positions=jax.ShapeDtypeStruct((n_pad, 3), f32) if needs_geometry else None,
+        species=jax.ShapeDtypeStruct((n_pad,), i32) if needs_geometry else None,
+        graph_ids=jax.ShapeDtypeStruct((n_pad,), i32) if needs_geometry else None,
+        targets=jax.ShapeDtypeStruct(
+            (n_graphs,) if energy_targets else (n_pad, d_out), f32
+        ),
+        n_graphs=n_graphs,
+    )
+    every = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    spec = GraphBatch(
+        node_feat=P(every, None),
+        edge_src=P(every), edge_dst=P(every),
+        node_mask=P(every), edge_mask=P(every),
+        positions=P(every, None) if needs_geometry else None,
+        species=P(every) if needs_geometry else None,
+        graph_ids=P(every) if needs_geometry else None,
+        targets=P() if energy_targets else P(every, None),
+        n_graphs=n_graphs,
+    )
+    note = f"padded nodes {n_nodes}->{n_pad}, edges {n_edges}->{e_pad}"
+    return batch, spec, n_pad, e_pad, note
+
+
+_GNN_FLOP_MODELS = {}
+
+
+def _gnn_cell(arch: ArchDef, cell: ShapeCell, mesh, unroll: bool = False) -> Cell:
+    aid = arch.arch_id
+    d_feat = cell.meta.get("d_feat", 0)
+    if cell.name == "molecule":
+        d_feat = max(d_feat, 4)
+    needs_geometry = aid in ("mace", "nequip")
+    if aid == "meshgraphnet":
+        from repro.models.gnn.meshgraphnet import init_mgn, mgn_loss
+
+        cfg = dataclasses.replace(arch.make_config(d_in=max(d_feat, 3), d_out=3), unroll=unroll)
+        loss = mgn_loss
+        init = init_mgn
+        d_out = 3
+        # per-edge: edge MLP 2 layers of 3d→d,d→d; per-node: 2d→d,d→d
+        d = cfg.d_hidden
+        per_edge = 2 * (3 * d * d + d * d)
+        per_node = 2 * (2 * d * d + d * d)
+    elif aid == "graphcast":
+        from repro.models.gnn.graphcast import graphcast_loss, init_graphcast
+
+        cfg = dataclasses.replace(arch.make_config(d_in=max(d_feat, 1)), unroll=unroll)
+        loss = graphcast_loss
+        init = init_graphcast
+        d_out = cfg.n_vars
+        d = cfg.d_hidden
+        per_edge = 2 * (3 * d * d + d * d)
+        per_node = 2 * (2 * d * d + d * d)
+    elif aid == "nequip":
+        from repro.models.gnn.nequip import init_nequip, nequip_loss
+        from repro.models.gnn.equivariant import n_paths
+
+        cfg = dataclasses.replace(arch.make_config(d_feat_in=d_feat), unroll=unroll)
+        loss = nequip_loss
+        init = init_nequip
+        d_out = 1
+        C, Pn = cfg.d_hidden, n_paths()
+        per_edge = 2 * (cfg.n_rbf * 64 + 64 * C * Pn) + 2 * Pn * 81 * C
+        per_node = 6 * C * C * 9
+    else:  # mace
+        from repro.models.gnn.mace import init_mace, mace_loss
+        from repro.models.gnn.equivariant import n_paths
+
+        cfg = dataclasses.replace(arch.make_config(d_feat_in=d_feat), unroll=unroll)
+        loss = mace_loss
+        init = init_mace
+        d_out = 1
+        C, Pn = cfg.d_hidden, n_paths()
+        per_edge = 2 * (cfg.n_rbf * 64 + 64 * C * Pn) + 2 * Pn * 81 * C
+        per_node = (cfg.correlation - 1) * 2 * Pn * 729 * C + 10 * C * C * 9
+
+    batch_abs, bspec, n_pad, e_pad, note = _gnn_batch_abstract(
+        cell, mesh, d_feat=d_feat, needs_geometry=needs_geometry,
+        d_out=d_out, energy_targets=needs_geometry,
+    )
+    params_abs = jax.eval_shape(lambda: init(cfg, jax.random.PRNGKey(0)))
+    opt_abs = abstract_opt_state(params_abs)
+    rules = gnn_rules(mesh)
+
+    def step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(
+            lambda p: loss(cfg, p, batch, rules)
+        )(params)
+        params, opt_state, gnorm = adamw_update(OPT_CFG, grads, opt_state, params)
+        return params, opt_state, l
+
+    pspec = jax.tree_util.tree_map(lambda _: P(), params_abs)
+    ospec = {"m": pspec, "v": pspec, "count": P()}
+    n_layers = cfg.n_layers
+    flops = 3.0 * n_layers * (per_edge * e_pad + per_node * n_pad)  # fwd+bwd
+    return Cell(
+        arch_id=aid, shape_name=cell.name, kind="train",
+        fn=step, abstract_args=(params_abs, opt_abs, batch_abs),
+        in_specs=(pspec, ospec, bspec), out_specs=(pspec, ospec, P()),
+        model_flops=flops, notes=note,
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_cell(arch: ArchDef, cell: ShapeCell, mesh) -> Cell:
+    from repro.models.recsys import sasrec as R
+
+    cfg = arch.make_config()
+    rules = recsys_rules(mesh)
+    params_abs = jax.eval_shape(lambda: R.init_sasrec(cfg, jax.random.PRNGKey(0)))
+    names = tuple(mesh.axis_names)
+    data = tuple(a for a in ("pod", "data") if a in names)
+    pspec = jax.tree_util.tree_map(lambda _: P(), params_abs)
+    pspec["item_embed"] = P("model", None)
+    d = cfg.embed_dim
+    S = cfg.seq_len
+    blk_flops = 2 * (4 * d * d + 2 * d * cfg.d_ff) + 4 * S * d  # per token
+
+    if cell.kind == "train":
+        B = cell["batch"]
+        opt_abs = abstract_opt_state(params_abs)
+        batch_abs = {
+            "item_seq": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "pos_items": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "neg_items": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+
+        def step(params, opt_state, batch):
+            l, grads = jax.value_and_grad(
+                lambda p: R.sasrec_train_loss(cfg, p, batch, rules)
+            )(params)
+            params, opt_state, _ = adamw_update(OPT_CFG, grads, opt_state, params)
+            return params, opt_state, l
+
+        ospec = {"m": pspec, "v": pspec, "count": P()}
+        bspec = {k: P(data, None) for k in batch_abs}
+        return Cell(
+            arch_id=arch.arch_id, shape_name=cell.name, kind="train",
+            fn=step, abstract_args=(params_abs, opt_abs, batch_abs),
+            in_specs=(pspec, ospec, bspec), out_specs=(pspec, ospec, P()),
+            model_flops=3.0 * B * S * cfg.n_blocks * blk_flops,
+        )
+
+    if cell.kind == "serve":
+        B = cell["batch"]
+        seq_abs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        k = 100
+        # bulk scoring streams user chunks — offline scoring never holds all
+        # user states (or a B×V score matrix) at once
+        user_chunk = min(B, 8192)
+
+        def step(params, item_seq):
+            table = rules.shard(params["item_embed"], ("vocab", None))
+            n_cat_chunks = 64
+            chunk = table.shape[0] // n_cat_chunks
+
+            def score_users(seq_chunk):
+                h = R.sasrec_user_state(cfg, params, seq_chunk, rules)[:, -1]
+
+                def body(carry, i):
+                    best_v, best_i = carry
+                    rows = jax.lax.dynamic_slice_in_dim(table, i * chunk, chunk, 0)
+                    scores = h @ rows.T                  # (uc, chunk)
+                    ids = i * chunk + jnp.arange(chunk)
+                    allv = jnp.concatenate([best_v, scores], axis=1)
+                    alli = jnp.concatenate(
+                        [best_i, jnp.broadcast_to(ids, scores.shape)], axis=1
+                    )
+                    v, idx = jax.lax.top_k(allv, k)
+                    return (v, jnp.take_along_axis(alli, idx, axis=1)), None
+
+                init = (jnp.full((h.shape[0], k), -jnp.inf),
+                        jnp.zeros((h.shape[0], k), jnp.int32))
+                (vals, ids), _ = jax.lax.scan(body, init, jnp.arange(n_cat_chunks))
+                return vals, ids
+
+            if B > user_chunk:
+                seqs = item_seq.reshape(B // user_chunk, user_chunk, S)
+                vals, ids = jax.lax.map(score_users, seqs)
+                return vals.reshape(B, k), ids.reshape(B, k)
+            return score_users(item_seq)
+
+        V = cfg.table_rows
+        return Cell(
+            arch_id=arch.arch_id, shape_name=cell.name, kind="serve",
+            fn=step, abstract_args=(params_abs, seq_abs),
+            in_specs=(pspec, P(data, None)),
+            out_specs=(P(data, None), P(data, None)),
+            model_flops=B * S * cfg.n_blocks * blk_flops + 2.0 * B * V * d,
+            notes=f"top-{k} over {V}-row catalog; user_chunk={user_chunk}",
+        )
+
+    # retrieval: one user, 1M candidate scores as a single matmul
+    B = cell["batch"]
+    NC = cell["n_candidates"]
+    seq_abs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    cand_abs = jax.ShapeDtypeStruct((NC,), jnp.int32)
+
+    def step(params, item_seq, candidates):
+        return R.sasrec_score_candidates(cfg, params, item_seq, candidates, rules)
+
+    return Cell(
+        arch_id=arch.arch_id, shape_name=cell.name, kind="retrieval",
+        fn=step, abstract_args=(params_abs, seq_abs, cand_abs),
+        in_specs=(pspec, P(None, None), P("model")),
+        out_specs=P(None, "model"),
+        model_flops=B * S * cfg.n_blocks * blk_flops + 2.0 * B * NC * d,
+    )
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, mesh, *, unroll: bool = False,
+               n_layers: int | None = None, seq_shard: bool = True,
+               moe_impl: str | None = None, microbatch: int = 1) -> Cell:
+    """`n_layers` overrides the config depth (layer-diff profiling)."""
+    arch = get_arch(arch_id)
+    if n_layers is not None:
+        base = arch.make_config
+
+        def _shallow(*a, **kw):
+            return dataclasses.replace(base(*a, **kw), n_layers=n_layers)
+
+        arch = dataclasses.replace(arch, make_config=_shallow)
+    if shape_name not in arch.shapes:
+        raise KeyError(f"{arch_id} has no shape {shape_name}")
+    if shape_name in arch.skips:
+        raise ValueError(
+            f"cell ({arch_id} × {shape_name}) is skipped: {arch.skips[shape_name]}"
+        )
+    cell = arch.shapes[shape_name]
+    if arch.family == "lm":
+        if cell.kind == "train":
+            return _lm_train_cell(arch, cell, mesh, unroll,
+                                  seq_shard=seq_shard, moe_impl=moe_impl,
+                                  microbatch=microbatch)
+        if cell.kind == "prefill":
+            return _lm_prefill_cell(arch, cell, mesh, unroll)
+        return _lm_decode_cell(arch, cell, mesh, unroll)
+    if arch.family == "gnn":
+        return _gnn_cell(arch, cell, mesh, unroll)
+    return _recsys_cell(arch, cell, mesh)

@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+A *function* (not a module-level constant) so importing this module never
+touches JAX device state — only launch/dryrun.py forces 512 host devices.
+
+Topology: one pod = 16×16 = 256 chips (v5e pod), axes ("data", "model");
+multi-pod = 2 pods = 512 chips, axes ("pod", "data", "model") where the
+"pod" axis crosses DCN/ICI pod boundaries and carries only data-parallel
+traffic (gradient all-reduce) by construction of the sharding rules.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_devices: int | None = None, axis: str = "data"):
+    """Small mesh over however many (host) devices exist — tests only."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))

@@ -1,0 +1,163 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all **per device** (the compiled
+module is the post-SPMD per-device program, so `cost_analysis()` FLOPs /
+bytes and HLO shapes are already per-device):
+
+    compute    = HLO_FLOPs / peak_FLOP/s            (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw                 (819 GB/s)
+    collective = wire_bytes / link_bw               (50 GB/s/link ICI)
+
+`wire_bytes` is NOT in cost_analysis — we parse the compiled HLO text and
+sum ring-model wire traffic over every collective op:
+
+    all-reduce        2·b·(g−1)/g     (reduce-scatter + all-gather ring)
+    all-gather        b_out·(g−1)/g
+    reduce-scatter    b_out·(g−1)
+    all-to-all        b·(g−1)/g
+    collective-permute b
+
+with b = the op's local output bytes and g its replica-group size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link (1-link-equivalent model)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: dict              # op kind → wire bytes (per device)
+    counts: dict              # op kind → #ops
+    total_wire_bytes: float
+
+    def row(self):
+        return {
+            "wire_bytes": self.total_wire_bytes,
+            "counts": dict(self.counts),
+            "bytes_by_kind": {k: v for k, v in self.per_op.items() if v},
+        }
+
+
+def collective_wire_bytes(hlo_text: str, n_devices: int) -> CollectiveStats:
+    per_op = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    op_re = re.compile(
+        r"\b(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+        r"reduce-scatter|all-to-all|collective-permute-start|"
+        r"collective-permute)\("
+    )
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3 :]
+        m = op_re.search(rhs)
+        if not m:
+            continue
+        kind = m.group(1).replace("-start", "")
+        if kind not in per_op:
+            continue
+        # output shape(s) sit between '=' and the op name (layouts included)
+        b = _shape_bytes(rhs[: m.start()])
+        g = _group_size(s, n_devices)
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = 2.0 * b * (g - 1) / g
+        elif kind == "all-gather":
+            wire = b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = b * (g - 1)
+        elif kind == "all-to-all":
+            wire = b * (g - 1) / g
+        else:  # collective-permute
+            wire = float(b)
+        per_op[kind] += wire
+        counts[kind] += 1
+    return CollectiveStats(
+        per_op=per_op, counts=counts,
+        total_wire_bytes=sum(per_op.values()),
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_dev: float
+    bytes_per_dev: float
+    wire_bytes_per_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_fraction: float     # MODEL_FLOPS / (HLO_FLOPs · n_dev)
+    roofline_fraction: float   # compute_s / max(all terms) — how close the
+                               # step is to being compute-bound at peak
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(cost: dict, hlo_text: str, n_devices: int,
+             model_flops: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    wire = collective_wire_bytes(hlo_text, n_devices).total_wire_bytes
+    ct = flops / PEAK_FLOPS
+    mt = byts / HBM_BW
+    lt = wire / LINK_BW
+    terms = {"compute": ct, "memory": mt, "collective": lt}
+    dominant = max(terms, key=terms.get)
+    total_flops = flops * n_devices
+    useful = model_flops / total_flops if total_flops else 0.0
+    bound = max(ct, mt, lt)
+    return Roofline(
+        flops_per_dev=flops, bytes_per_dev=byts, wire_bytes_per_dev=wire,
+        compute_s=ct, memory_s=mt, collective_s=lt, dominant=dominant,
+        model_flops=model_flops, useful_fraction=useful,
+        roofline_fraction=(ct / bound) if bound > 0 else 0.0,
+    )

@@ -1,0 +1,6 @@
+"""Model zoo for the assigned architectures.
+
+transformer/ — decoder-only LMs (dense + MoE), train + KV-cache serving.
+gnn/        — message-passing and equivariant GNNs.
+recsys/     — embedding-table + sequential recommendation.
+"""

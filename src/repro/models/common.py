@@ -1,0 +1,103 @@
+"""Shared model building blocks: init helpers, norms, MLPs, sharding hooks."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ShardRules:
+    """Logical-axis → PartitionSpec hook threaded through every model.
+
+    Models annotate activations/params with *logical* axis names; the
+    distribution layer (repro.dist.sharding) maps them onto mesh axes.  The
+    default instance is a no-op so models run unmodified on a single device.
+    """
+
+    def spec(self, axes: Sequence[str | None]):
+        return None
+
+    def shard(self, x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+        return x
+
+
+NO_SHARD = ShardRules()
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32, scale: float = 1.0):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis]
+    std = scale / np.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32, scale: float = 1.0):
+    return (scale * jax.random.normal(key, shape) / np.sqrt(shape[-1])).astype(dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with fp32 accumulation (bf16-safe)."""
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * gamma.astype(x.dtype) + beta.astype(x.dtype)
+
+
+def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], (sizes[i], sizes[i + 1]), dtype=dtype)
+        for i in range(len(sizes) - 1)
+    } | {
+        f"b{i}": jnp.zeros((sizes[i + 1],), dtype) for i in range(len(sizes) - 1)
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, *, act=jax.nn.silu, final_act=False) -> jax.Array:
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(
+        int(np.prod(p.shape)) * p.dtype.itemsize
+        for p in jax.tree_util.tree_leaves(params)
+    )
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p, tree
+    )
+
+
+@dataclasses.dataclass
+class StepMetrics:
+    loss: jax.Array
+    grad_norm: jax.Array
+
+    def __iter__(self):
+        yield self.loss
+        yield self.grad_norm
+
+
+jax.tree_util.register_dataclass(StepMetrics)

@@ -1,0 +1,14 @@
+"""GNN architectures: MeshGraphNet, GraphCast, NequIP, MACE.
+
+Message passing is built on `jax.ops.segment_sum` over edge-index arrays —
+JAX has no native sparse message-passing; this scatter/gather substrate IS
+part of the system (see kernel_taxonomy §GNN).
+"""
+
+from repro.models.gnn.common import GraphBatch, segment_softmax
+from repro.models.gnn.meshgraphnet import MGNConfig, init_mgn, mgn_forward, mgn_loss
+from repro.models.gnn.graphcast import GraphCastConfig, init_graphcast, graphcast_forward, graphcast_loss
+from repro.models.gnn.equivariant import sh_l2, gaunt_tensor, enumerate_paths
+from repro.models.gnn.nequip import NequIPConfig, init_nequip, nequip_energy, nequip_loss
+from repro.models.gnn.mace import MACEConfig, init_mace, mace_energy, mace_loss
+from repro.models.gnn.sampler import sample_neighbors

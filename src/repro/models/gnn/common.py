@@ -1,0 +1,52 @@
+"""Graph batch container + message-passing primitives."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GraphBatch:
+    """Static-shape graph batch.
+
+    node_feat : (N, F) float — input node features (may be zeros).
+    edge_src/edge_dst : (E,) int32 — COO edge index (messages src→dst).
+    node_mask / edge_mask : (N,)/(E,) float — 1 for real entries (padding).
+    positions : (N, 3) float or None — for equivariant models.
+    species : (N,) int32 or None — atomic species.
+    graph_ids : (N,) int32 or None — graph membership (batched molecules).
+    n_graphs : static int.
+    targets : model-specific supervision.
+    """
+
+    node_feat: jax.Array
+    edge_src: jax.Array
+    edge_dst: jax.Array
+    node_mask: jax.Array
+    edge_mask: jax.Array
+    positions: jax.Array | None = None
+    species: jax.Array | None = None
+    graph_ids: jax.Array | None = None
+    targets: jax.Array | None = None
+    n_graphs: int = dataclasses.field(default=1, metadata=dict(static=True))
+
+
+def scatter_sum(values: jax.Array, index: jax.Array, n: int) -> jax.Array:
+    """Σ values into n rows (the GNN aggregation primitive)."""
+    return jax.ops.segment_sum(values, index, num_segments=n)
+
+
+def gather(x: jax.Array, index: jax.Array) -> jax.Array:
+    return jnp.take(x, index, axis=0)
+
+
+def segment_softmax(logits: jax.Array, segment_ids: jax.Array, n: int) -> jax.Array:
+    """Numerically-stable softmax over segments (GAT-style edge softmax)."""
+    mx = jax.ops.segment_max(logits, segment_ids, num_segments=n)
+    ex = jnp.exp(logits - jnp.take(mx, segment_ids, axis=0))
+    z = jax.ops.segment_sum(ex, segment_ids, num_segments=n)
+    return ex / jnp.maximum(jnp.take(z, segment_ids, axis=0), 1e-30)

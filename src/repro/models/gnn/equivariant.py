@@ -1,0 +1,148 @@
+"""E(3)-equivariant substrate: real spherical harmonics (l ≤ 2), Gaunt
+tensor-product coefficients, radial bases, and the channelwise tensor
+product used by NequIP and MACE.
+
+Irrep layout: features are (..., C, 9) with the 9 components ordered
+[l=0 (1), l=1 (3: m=−1,0,1 ≙ y,z,x), l=2 (5)] — orthonormal real SH.
+
+Coupling coefficients: the real-SH Gaunt tensor
+    G[i, j, k] = ∫_{S²} Y_i Y_j Y_k dΩ
+is computed once at import by Gauss-Legendre (cosθ) × trapezoid (φ)
+quadrature, which is *exact* for the degree-6 integrands arising at
+l_max = 2.  Contracting features with edge harmonics through G is an
+equivariant bilinear map (the l₁⊗l₂→l₃ channelwise tensor product with
+Gaunt weights — the same contraction family e3nn builds from Wigner 3j;
+adequate for NequIP/MACE-style networks and unit-tested for rotation
+invariance of scalar outputs).
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+L_MAX = 2
+N_IRREPS = (L_MAX + 1) ** 2  # 9
+L_SLICES = {0: slice(0, 1), 1: slice(1, 4), 2: slice(4, 9)}
+L_OF_INDEX = np.array([0, 1, 1, 1, 2, 2, 2, 2, 2])
+
+
+def sh_l2_np(r: np.ndarray) -> np.ndarray:
+    """Orthonormal real spherical harmonics of unit vectors r (..., 3)."""
+    x, y, z = r[..., 0], r[..., 1], r[..., 2]
+    c0 = 0.5 / np.sqrt(np.pi)
+    c1 = np.sqrt(3.0 / (4.0 * np.pi))
+    c2a = 0.5 * np.sqrt(15.0 / np.pi)
+    c2b = 0.25 * np.sqrt(5.0 / np.pi)
+    c2c = 0.25 * np.sqrt(15.0 / np.pi)
+    return np.stack(
+        [
+            np.full_like(x, c0),
+            c1 * y, c1 * z, c1 * x,
+            c2a * x * y, c2a * y * z,
+            c2b * (3 * z * z - 1.0),
+            c2a * x * z, c2c * (x * x - y * y),
+        ],
+        axis=-1,
+    )
+
+
+def sh_l2(r):
+    """JAX version of sh_l2_np (same formulas, jnp ops)."""
+    x, y, z = r[..., 0], r[..., 1], r[..., 2]
+    c0 = 0.5 / np.sqrt(np.pi)
+    c1 = np.sqrt(3.0 / (4.0 * np.pi))
+    c2a = 0.5 * np.sqrt(15.0 / np.pi)
+    c2b = 0.25 * np.sqrt(5.0 / np.pi)
+    c2c = 0.25 * np.sqrt(15.0 / np.pi)
+    return jnp.stack(
+        [
+            jnp.full_like(x, c0),
+            c1 * y, c1 * z, c1 * x,
+            c2a * x * y, c2a * y * z,
+            c2b * (3 * z * z - 1.0),
+            c2a * x * z, c2c * (x * x - y * y),
+        ],
+        axis=-1,
+    )
+
+
+@lru_cache(maxsize=1)
+def gaunt_tensor() -> np.ndarray:
+    """G[i,j,k] = ∫ Y_i Y_j Y_k dΩ over the unit sphere (9,9,9)."""
+    n_t, n_p = 24, 48
+    ct, wt = np.polynomial.legendre.leggauss(n_t)       # cosθ nodes/weights
+    phi = (np.arange(n_p) + 0.5) * (2 * np.pi / n_p)
+    wp = 2 * np.pi / n_p
+    st = np.sqrt(1.0 - ct**2)
+    # grid of unit vectors
+    x = st[:, None] * np.cos(phi)[None, :]
+    y = st[:, None] * np.sin(phi)[None, :]
+    z = np.broadcast_to(ct[:, None], x.shape)
+    pts = np.stack([x, y, z], axis=-1).reshape(-1, 3)
+    w = (wt[:, None] * wp * np.ones(n_p)[None, :]).reshape(-1)
+    Y = sh_l2_np(pts)                                    # (M, 9)
+    G = np.einsum("m,mi,mj,mk->ijk", w, Y, Y, Y)
+    G[np.abs(G) < 1e-12] = 0.0
+    return G
+
+
+@lru_cache(maxsize=1)
+def enumerate_paths() -> list:
+    """Nonzero coupling paths (l1, l2, l3) under the Gaunt tensor."""
+    G = gaunt_tensor()
+    paths = []
+    for l1 in range(L_MAX + 1):
+        for l2 in range(L_MAX + 1):
+            for l3 in range(L_MAX + 1):
+                blk = G[L_SLICES[l1], L_SLICES[l2], L_SLICES[l3]]
+                if np.abs(blk).max() > 1e-10:
+                    paths.append((l1, l2, l3))
+    return paths
+
+
+@lru_cache(maxsize=1)
+def path_tensors() -> np.ndarray:
+    """(P, 9, 9, 9) per-path masked Gaunt blocks (zero outside the path)."""
+    G = gaunt_tensor()
+    out = []
+    for l1, l2, l3 in enumerate_paths():
+        M = np.zeros_like(G)
+        M[L_SLICES[l1], L_SLICES[l2], L_SLICES[l3]] = G[
+            L_SLICES[l1], L_SLICES[l2], L_SLICES[l3]
+        ]
+        out.append(M)
+    return np.stack(out)
+
+
+def n_paths() -> int:
+    return len(enumerate_paths())
+
+
+def tensor_product(feat: jnp.ndarray, sh: jnp.ndarray,
+                   path_w: jnp.ndarray) -> jnp.ndarray:
+    """Channelwise equivariant TP:  out[e,c,k] = Σ_p w[e,c,p]·(f ⊗_G sh)_p.
+
+    feat   : (E, C, 9) — per-edge source-node features
+    sh     : (E, 9)    — per-edge spherical harmonics
+    path_w : (E, C, P) — per-path weights (radial MLP output or constants)
+    """
+    GP = jnp.asarray(path_tensors(), feat.dtype)         # (P, 9, 9, 9)
+    # contract sh into the Gaunt blocks first: (E, P, 9_in, 9_out)
+    W = jnp.einsum("pijk,ej->epik", GP, sh)
+    return jnp.einsum("epik,eci,ecp->eck", W, feat, path_w)
+
+
+# ---------------------------------------------------------------------------
+# Radial basis
+# ---------------------------------------------------------------------------
+
+def bessel_rbf(r: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """Bessel radial basis with smooth cosine cutoff (NequIP §methods)."""
+    r = jnp.maximum(r, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=r.dtype)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * np.pi * r[..., None] / cutoff) / r[..., None]
+    fc = 0.5 * (jnp.cos(np.pi * jnp.clip(r / cutoff, 0, 1)) + 1.0)
+    return basis * fc[..., None]

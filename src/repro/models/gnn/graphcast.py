@@ -1,0 +1,91 @@
+"""GraphCast processor (Lam et al., arXiv:2212.12794) — adapted.
+
+The original runs encoder (grid→mesh), a 16-layer message-passing processor
+on a refinement-6 icosahedral mesh (d_hidden 512), and a decoder
+(mesh→grid), predicting 227 surface/atmospheric variables.
+
+Adaptation (DESIGN.md §6): the assigned shape suite supplies generic graphs
+(n_nodes, n_edges), so the encoder/decoder become per-node MLPs
+(d_feat → 512 → n_vars) and the processor — the dominant compute — runs on
+the supplied graph.  Edge MLPs + node MLPs with residuals, exactly the
+GraphCast interaction-network block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import NO_SHARD, ShardRules, layer_norm, mlp_apply, mlp_init
+from repro.models.gnn.common import GraphBatch, gather, scatter_sum
+from repro.models.gnn.meshgraphnet import _mlp_ln, _mlp_ln_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    mesh_refinement: int = 6
+    aggregator: str = "sum"
+    n_vars: int = 227
+    d_in: int = 227
+    dtype: Any = jnp.float32
+    unroll: bool = False
+
+
+def init_graphcast(cfg: GraphCastConfig, key) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_hidden
+    layer_keys = jax.random.split(ks[2], cfg.n_layers)
+
+    def one_layer(k):
+        ke, kv = jax.random.split(k)
+        return {
+            "edge": _mlp_ln_init(ke, [3 * d, d, d], cfg.dtype),
+            "node": _mlp_ln_init(kv, [2 * d, d, d], cfg.dtype),
+        }
+
+    return {
+        "enc": _mlp_ln_init(ks[0], [cfg.d_in, d, d], cfg.dtype),
+        "enc_edge": _mlp_ln_init(ks[1], [1, d, d], cfg.dtype),
+        "layers": jax.vmap(one_layer)(layer_keys),
+        "dec": mlp_init(ks[3], [d, d, cfg.n_vars], cfg.dtype),
+    }
+
+
+def graphcast_forward(cfg: GraphCastConfig, params: dict, batch: GraphBatch,
+                      rules: ShardRules = NO_SHARD) -> jax.Array:
+    n = batch.node_feat.shape[0]
+    h = _mlp_ln(params["enc"], batch.node_feat.astype(cfg.dtype))
+    e = _mlp_ln(
+        params["enc_edge"], batch.edge_mask[:, None].astype(cfg.dtype)
+    )
+    h = rules.shard(h, ("nodes", None))
+    e = rules.shard(e, ("edges", None))
+
+    def body(carry, layer_p):
+        h, e = carry
+        hs, hd = gather(h, batch.edge_src), gather(h, batch.edge_dst)
+        e = e + _mlp_ln(layer_p["edge"], jnp.concatenate([e, hs, hd], -1))
+        e = e * batch.edge_mask[:, None]
+        agg = scatter_sum(e, batch.edge_dst, n)
+        h = h + _mlp_ln(layer_p["node"], jnp.concatenate([h, agg], -1))
+        h = rules.shard(h, ("nodes", None))
+        e = rules.shard(e, ("edges", None))
+        return (h, e), None
+
+    (h, _), _ = jax.lax.scan(body, (h, e), params["layers"],
+                            unroll=cfg.n_layers if cfg.unroll else 1)
+    return mlp_apply(params["dec"], h)
+
+
+def graphcast_loss(cfg: GraphCastConfig, params: dict, batch: GraphBatch,
+                   rules: ShardRules = NO_SHARD) -> jax.Array:
+    pred = graphcast_forward(cfg, params, batch, rules)
+    tgt = batch.targets if batch.targets is not None else jnp.zeros_like(pred)
+    err = ((pred - tgt) ** 2).mean(-1) * batch.node_mask
+    return err.sum() / jnp.maximum(batch.node_mask.sum(), 1.0)

@@ -1,0 +1,209 @@
+"""Mixture-of-Experts layer: shared + routed experts, top-k token choice.
+
+TPU-static dispatch (MaxText/GShard style): token→expert assignments are
+sorted by expert id and scattered into a fixed `(E, C, d)` capacity buffer
+(`C = ceil(T·top_k·capacity_factor / E)`, tokens over capacity drop).  The
+expert matmuls are a single batched einsum whose expert dim shards over the
+"model"/"expert" mesh axis — the scatter/gather around it lowers to the EP
+all-to-all.  DeepSeek/Qwen train without drops via aux-free balancing; the
+capacity buffer is the static-shape TPU adaptation (DESIGN.md §2) and with
+capacity_factor ≥ 2 drops are negligible at init-time routing entropy.
+
+Routing: softmax gate, top-k, renormalized among the selected experts
+(DeepSeek-MoE style); shared experts always-on (n_shared may be 0).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ShardRules, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001  # load-balance aux loss (GShard-style)
+    impl: str = "pjit"                # "pjit" (einsum dispatch) | "shardmap" (EP a2a)
+
+
+def init_moe(moe: MoEConfig, d_model: int, key, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    e, f = moe.n_experts, moe.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, e), dtype=jnp.float32),
+        "wi": dense_init(ks[1], (e, d_model, f), in_axis=1, dtype=dtype),
+        "wg": dense_init(ks[2], (e, d_model, f), in_axis=1, dtype=dtype),
+        "wo": dense_init(ks[3], (e, f, d_model), in_axis=1, dtype=dtype),
+    }
+    if moe.n_shared:
+        p["shared_wi"] = dense_init(ks[4], (d_model, f * moe.n_shared), dtype=dtype)
+        p["shared_wg"] = dense_init(ks[5], (d_model, f * moe.n_shared), dtype=dtype)
+        p["shared_wo"] = dense_init(ks[6], (f * moe.n_shared, d_model), dtype=dtype)
+    return p
+
+
+def capacity(moe: MoEConfig, n_tokens: int) -> int:
+    c = int(n_tokens * moe.top_k * moe.capacity_factor / moe.n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # multiple of 8 for TPU lane alignment
+
+
+def moe_apply(moe: MoEConfig, p: dict, x: jax.Array, rules: ShardRules,
+              dtype) -> jax.Array:
+    """x: (B, S, d) → (B, S, d)."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    # --- routing (fp32 for numerics) ---
+    logits = xt.astype(jnp.float32) @ p["router"]
+    gates = jax.nn.softmax(logits, axis=-1)                       # (T, E)
+    top_w, top_e = jax.lax.top_k(gates, moe.top_k)                # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- static-capacity dispatch ---
+    C = capacity(moe, T)
+    E = moe.n_experts
+    flat_e = top_e.reshape(-1)                                    # (T·k,)
+    flat_t = jnp.repeat(jnp.arange(T), moe.top_k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e)                                   # stable
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position of each entry within its expert's block
+    seg_start = jnp.searchsorted(se, jnp.arange(E), side="left")  # (E,)
+    pos_in_e = jnp.arange(T * moe.top_k) - seg_start[se]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)              # overflow row
+
+    buf = jnp.zeros((E * C + 1, d), dtype)
+    buf = buf.at[slot].set(jnp.take(xt, st, axis=0).astype(dtype))
+    buf = buf[: E * C].reshape(E, C, d)
+    buf = rules.shard(buf, ("experts", None, "embed"))
+
+    # --- expert FFNs (batched over experts; shards over the expert axis) ---
+    zi = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(dtype))
+    zg = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(dtype))
+    z = jax.nn.silu(zg) * zi
+    z = rules.shard(z, ("experts", None, "expert_ffn"))
+    out_buf = jnp.einsum("ecf,efd->ecd", z, p["wo"].astype(dtype))
+    out_buf = out_buf.reshape(E * C, d)
+
+    # --- combine back to tokens ---
+    contrib = jnp.take(out_buf, jnp.minimum(slot, E * C - 1), axis=0)
+    contrib = contrib * (sw * keep).astype(dtype)[:, None]
+    y = jnp.zeros((T, d), dtype).at[st].add(contrib)
+
+    # --- shared (always-on) experts ---
+    if moe.n_shared:
+        sz = jax.nn.silu(xt.astype(dtype) @ p["shared_wg"].astype(dtype))
+        sz = sz * (xt.astype(dtype) @ p["shared_wi"].astype(dtype))
+        y = y + sz @ p["shared_wo"].astype(dtype)
+
+    return y.reshape(B, S, d)
+
+
+def load_balance_aux(gates: jax.Array, top_e: jax.Array, n_experts: int) -> jax.Array:
+    """GShard aux loss: E · Σ_e (fraction routed to e) · (mean gate of e)."""
+    T = gates.shape[0]
+    frac = jnp.zeros(n_experts).at[top_e.reshape(-1)].add(1.0) / (T * top_e.shape[-1])
+    mean_gate = gates.mean(0)
+    return n_experts * jnp.sum(frac * mean_gate)
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert-parallel dispatch (EXPERIMENTS.md §Perf hillclimb #2)
+# ---------------------------------------------------------------------------
+
+def moe_apply_shardmap(moe: MoEConfig, p: dict, x: jax.Array,
+                       *, data_axes, model_axis: str, dtype,
+                       fsdp_gather: bool = False) -> jax.Array:
+    """Expert-parallel MoE with LOCAL dispatch + all-to-all (production EP).
+
+    Call inside shard_map, with x_loc (B_loc, S_loc, d) — each device
+    routes ONLY its own tokens (no global sort/gather, the pjit baseline's
+    failure mode), builds a local (E, C_loc, d) capacity buffer, and moves
+    tokens to expert owners with ONE all-to-all over the model axis
+    (reverse a2a on the way back).  Expert weights arrive model-sharded
+    (E_loc = E/M experts per shard; optionally FSDP d-shards re-gathered
+    over the data axes).
+
+    Wire per device per layer ≈ 2 · C_loc·(M−1)/M · E_loc · d words — vs
+    the pjit baseline's replicated-sort traffic (observed 30× larger).
+    """
+    B, S, d = x.shape
+    T = B * S
+    M = jax.lax.axis_size(model_axis)
+    xt = x.reshape(T, d)
+
+    router = p["router"]
+    wi, wg, wo = p["wi"], p["wg"], p["wo"]           # (E_loc, d?, f)
+    if fsdp_gather and data_axes:
+        wi = jax.lax.all_gather(wi, data_axes, axis=1, tiled=True)
+        wg = jax.lax.all_gather(wg, data_axes, axis=1, tiled=True)
+        wo = jax.lax.all_gather(wo, data_axes, axis=2, tiled=True)
+    E = moe.n_experts
+    E_loc = wi.shape[0]
+    assert E_loc * M == E, (E_loc, M, E)
+
+    # --- local routing ---
+    gates = jax.nn.softmax(xt.astype(jnp.float32) @ router, axis=-1)
+    top_w, top_e = jax.lax.top_k(gates, moe.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    C = capacity(moe, T)
+    flat_e = top_e.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), moe.top_k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(T * moe.top_k) - seg_start[se]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)
+
+    buf = jnp.zeros((E * C + 1, d), dtype)
+    buf = buf.at[slot].set(jnp.take(xt, st, axis=0).astype(dtype))
+    buf = buf[: E * C].reshape(M, E_loc, C, d)       # experts grouped by owner
+
+    # --- dispatch a2a: shard m receives its experts' tokens from everyone ---
+    recv = jax.lax.all_to_all(buf, model_axis, split_axis=0, concat_axis=0,
+                              tiled=False)           # (M, E_loc, C, d)
+    tokens = recv.transpose(1, 0, 2, 3).reshape(E_loc, M * C, d)
+
+    # --- local expert FFNs ---
+    zi = jnp.einsum("ecd,edf->ecf", tokens, wi.astype(dtype))
+    zg = jnp.einsum("ecd,edf->ecf", tokens, wg.astype(dtype))
+    z = jax.nn.silu(zg) * zi
+    out = jnp.einsum("ecf,efd->ecd", z, wo.astype(dtype))
+
+    # --- return a2a ---
+    back = out.reshape(E_loc, M, C, d).transpose(1, 0, 2, 3)  # (M, E_loc, C, d)
+    ret = jax.lax.all_to_all(back, model_axis, split_axis=0, concat_axis=0,
+                             tiled=False)            # (M, E_loc, C, d)
+    out_buf = ret.reshape(E * C, d)
+
+    # --- combine ---
+    contrib = jnp.take(out_buf, jnp.minimum(slot, E * C - 1), axis=0)
+    contrib = contrib * (sw * keep).astype(dtype)[:, None]
+    y = jnp.zeros((T, d), dtype).at[st].add(contrib)
+
+    if moe.n_shared:
+        # gather the (small) shared-expert f-slices so each shard can apply
+        # the FULL shared FFN to its own tokens (tokens may differ per model
+        # shard under sequence sharding — a psum of partials would mix them)
+        swi = jax.lax.all_gather(p["shared_wi"], model_axis, axis=1, tiled=True)
+        swg = jax.lax.all_gather(p["shared_wg"], model_axis, axis=1, tiled=True)
+        swo = jax.lax.all_gather(p["shared_wo"], model_axis, axis=0, tiled=True)
+        sz = jax.nn.silu(xt.astype(dtype) @ swg.astype(dtype))
+        sz = sz * (xt.astype(dtype) @ swi.astype(dtype))
+        y = y + sz @ swo.astype(dtype)
+
+    return y.reshape(B, S, d)

@@ -1,0 +1,10 @@
+"""RecSys: embedding tables + SASRec sequential recommender."""
+
+from repro.models.recsys.embedding import embedding_bag
+from repro.models.recsys.sasrec import (
+    SASRecConfig,
+    init_sasrec,
+    sasrec_user_state,
+    sasrec_train_loss,
+    sasrec_score_candidates,
+)

@@ -1,0 +1,41 @@
+"""EmbeddingBag for JAX: ragged multi-hot lookup + segment reduce.
+
+JAX has no native `nn.EmbeddingBag` (kernel_taxonomy §RecSys) — this IS the
+system's lookup-reduce hot path: `jnp.take` over the (row-sharded) table
+followed by `segment_sum`/`segment_max`.  The Pallas `embedding_bag` kernel
+implements the same contraction with VMEM tiling; this module is the
+reference implementation and the single-device fallback.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(
+    table: jax.Array,        # (vocab, dim)
+    indices: jax.Array,      # (nnz,) int — flattened multi-hot ids
+    offsets_or_segments: jax.Array,  # (nnz,) segment id per index
+    n_bags: int,
+    *,
+    mode: str = "sum",
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Gather rows and reduce per bag.  segment ids must be sorted for TPU
+    efficiency (the data pipeline guarantees it); correctness does not
+    depend on it."""
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, offsets_or_segments, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, offsets_or_segments, num_segments=n_bags)
+        c = jax.ops.segment_sum(
+            jnp.ones_like(indices, rows.dtype), offsets_or_segments, num_segments=n_bags
+        )
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, offsets_or_segments, num_segments=n_bags)
+    raise ValueError(mode)

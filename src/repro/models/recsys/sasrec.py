@@ -1,0 +1,139 @@
+"""SASRec (Kang & McAuley, arXiv:1808.09781): self-attentive sequential
+recommendation.  Assigned config: embed_dim 50, 2 blocks, 1 head, seq 50.
+
+Training: next-item prediction with sampled-negative binary cross-entropy
+(the paper's objective: one negative per positive).  Serving: the final
+hidden state is the user representation; candidates are scored by dot
+product against (row-sharded) item embeddings — `retrieval_cand` scores one
+user against 10⁶ candidates as a single batched matmul, not a loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import (
+    NO_SHARD,
+    ShardRules,
+    dense_init,
+    embed_init,
+    layer_norm,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    d_ff: int = 50
+    pad_rows: int = 512     # table rows padded for clean row-sharding
+    dtype: Any = jnp.float32
+
+    @property
+    def table_rows(self) -> int:
+        """Row 0 is the padding item; rows padded to `pad_rows` multiple so
+        the table row-shards evenly over any mesh axis ≤ pad_rows."""
+        return -(-(self.n_items + 1) // self.pad_rows) * self.pad_rows
+
+    def n_params(self) -> int:
+        d = self.embed_dim
+        blk = 4 * d * d + 2 * d * self.d_ff + 4 * d
+        return (self.table_rows + self.seq_len) * d + self.n_blocks * blk
+
+
+def init_sasrec(cfg: SASRecConfig, key) -> dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    blk_keys = jax.random.split(ks[2], cfg.n_blocks)
+
+    def one_block(k):
+        kk = jax.random.split(k, 6)
+        return {
+            "wq": dense_init(kk[0], (d, d), dtype=cfg.dtype),
+            "wk": dense_init(kk[1], (d, d), dtype=cfg.dtype),
+            "wv": dense_init(kk[2], (d, d), dtype=cfg.dtype),
+            "wo": dense_init(kk[3], (d, d), dtype=cfg.dtype),
+            "w1": dense_init(kk[4], (d, cfg.d_ff), dtype=cfg.dtype),
+            "w2": dense_init(kk[5], (cfg.d_ff, d), dtype=cfg.dtype),
+            "ln1_g": jnp.ones((d,), cfg.dtype), "ln1_b": jnp.zeros((d,), cfg.dtype),
+            "ln2_g": jnp.ones((d,), cfg.dtype), "ln2_b": jnp.zeros((d,), cfg.dtype),
+        }
+
+    return {
+        # row 0 = padding item
+        "item_embed": embed_init(ks[0], (cfg.table_rows, d), cfg.dtype),
+        "pos_embed": embed_init(ks[1], (cfg.seq_len, d), cfg.dtype),
+        "blocks": jax.vmap(one_block)(blk_keys),
+        "final_ln_g": jnp.ones((d,), cfg.dtype),
+        "final_ln_b": jnp.zeros((d,), cfg.dtype),
+    }
+
+
+def _block(cfg: SASRecConfig, p: dict, x: jax.Array, mask: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    h = layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q, k, v = h @ p["wq"], h @ p["wk"], h @ p["wv"]
+    H = cfg.n_heads
+    dh = d // H
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, H, dh)
+    v = v.reshape(B, S, H, dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    valid = causal[None, None] & (mask[:, None, None, :] > 0)
+    s = jnp.where(valid, s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S, d)
+    x = x + o @ p["wo"]
+    h = layer_norm(x, p["ln2_g"], p["ln2_b"])
+    x = x + jax.nn.relu(h @ p["w1"]) @ p["w2"]
+    return x * mask[:, :, None]
+
+
+def sasrec_user_state(cfg: SASRecConfig, params: dict, item_seq: jax.Array,
+                      rules: ShardRules = NO_SHARD) -> jax.Array:
+    """item_seq (B, S) int32 (0 = pad) → per-position user states (B, S, d)."""
+    B, S = item_seq.shape
+    mask = (item_seq > 0).astype(cfg.dtype)
+    x = jnp.take(params["item_embed"], item_seq, axis=0) * np.sqrt(cfg.embed_dim)
+    x = x + params["pos_embed"][None, :S]
+    x = x * mask[:, :, None]
+    x = rules.shard(x, ("batch", None, None))
+    for i in range(cfg.n_blocks):
+        blk = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+        x = _block(cfg, blk, x, mask)
+    return layer_norm(x, params["final_ln_g"], params["final_ln_b"])
+
+
+def sasrec_train_loss(cfg: SASRecConfig, params: dict, batch: dict,
+                      rules: ShardRules = NO_SHARD) -> jax.Array:
+    """batch: item_seq (B,S), pos_items (B,S), neg_items (B,S)."""
+    h = sasrec_user_state(cfg, params, batch["item_seq"], rules)
+    pe = jnp.take(params["item_embed"], batch["pos_items"], axis=0)
+    ne = jnp.take(params["item_embed"], batch["neg_items"], axis=0)
+    pos_logit = (h * pe).sum(-1)
+    neg_logit = (h * ne).sum(-1)
+    mask = (batch["pos_items"] > 0).astype(cfg.dtype)
+    loss = -(
+        jax.nn.log_sigmoid(pos_logit) + jax.nn.log_sigmoid(-neg_logit)
+    ) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def sasrec_score_candidates(cfg: SASRecConfig, params: dict, item_seq: jax.Array,
+                            candidates: jax.Array,
+                            rules: ShardRules = NO_SHARD) -> jax.Array:
+    """Serve: score candidates (N_c,) for each user → (B, N_c) logits."""
+    h = sasrec_user_state(cfg, params, item_seq, rules)[:, -1]   # (B, d)
+    ce = jnp.take(params["item_embed"], candidates, axis=0)      # (N_c, d)
+    ce = rules.shard(ce, ("vocab", None))
+    return rules.shard(h @ ce.T, ("batch", "vocab"))

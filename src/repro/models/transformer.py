@@ -1,0 +1,527 @@
+"""Decoder-only transformer LM: GQA + RoPE + RMSNorm + SwiGLU (+ MoE).
+
+Covers the five assigned LM architectures (tinyllama, mistral-large,
+command-r dense; deepseek-moe, qwen3-moe sparse).  Production posture:
+
+* **scan-over-layers** with stacked parameters (compact HLO, fast compile at
+  88 layers, remat-friendly) — standard MaxText structure,
+* **chunked (online-softmax) attention** in pure JAX — O(S·block) memory so
+  32k-token prefill lowers without materializing S×S scores; the Pallas
+  `flash_attention` kernel implements the same contraction for real TPU,
+* logical-axis sharding hooks (`ShardRules`) on every activation that the
+  distribution layer maps to mesh axes,
+* separate `train_step` (next-token CE + optimizer) and `prefill` /
+  `decode_step` (KV cache) entry points — the shapes suite lowers
+  `train_4k` against the former and `prefill_32k` / `decode_32k` against
+  the latter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import NO_SHARD, ShardRules, dense_init, embed_init, rms_norm
+from repro.models.moe import MoEConfig, init_moe, moe_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    moe: MoEConfig | None = None
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16          # compute dtype
+    param_dtype: Any = jnp.float32     # master params
+    attn_block_kv: int = 1024          # online-softmax KV block
+    remat: bool = True
+    attn: str = "full"                 # "full" | "sliding_window"
+    window: int = 4096                 # for sliding_window
+    # "auto": masked full attention for training seqs ≤ 8k (remat-friendly
+    # backward), online-softmax chunked otherwise and for serving.
+    attn_impl: str = "auto"
+    unroll: bool = False               # unroll scan-over-layers (dry-run
+                                       # fidelity: per-layer FLOPs/collectives
+                                       # visible to cost_analysis)
+
+    @property
+    def q_per_kv(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    def n_params(self) -> int:
+        d, h = self.d_model, self.n_heads * self.d_head
+        kv = self.n_kv_heads * self.d_head
+        attn = d * h + 2 * d * kv + h * d
+        if self.moe is None:
+            ffn = 3 * d * self.d_ff
+        else:
+            ffn = 3 * d * self.moe.d_ff_expert * (self.moe.n_experts + self.moe.n_shared)
+            ffn += d * self.moe.n_experts  # router
+        return self.n_layers * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+
+    def n_active_params(self) -> int:
+        if self.moe is None:
+            return self.n_params()
+        d = self.d_model
+        h, kv = self.n_heads * self.d_head, self.n_kv_heads * self.d_head
+        attn = d * h + 2 * d * kv + h * d
+        ffn = 3 * d * self.moe.d_ff_expert * (self.moe.top_k + self.moe.n_shared)
+        return self.n_layers * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_layer(cfg: LMConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    d, dh = cfg.d_model, cfg.d_head
+    p = {
+        "attn_norm": jnp.ones((d,), cfg.param_dtype),
+        "wq": dense_init(ks[0], (d, cfg.n_heads, dh), dtype=cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads, dh), dtype=cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads, dh), dtype=cfg.param_dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads, dh, d), in_axis=0, dtype=cfg.param_dtype),
+        "ffn_norm": jnp.ones((d,), cfg.param_dtype),
+    }
+    if cfg.moe is None:
+        p["ffn"] = {
+            "wi": dense_init(ks[4], (d, cfg.d_ff), dtype=cfg.param_dtype),
+            "wg": dense_init(ks[5], (d, cfg.d_ff), dtype=cfg.param_dtype),
+            "wo": dense_init(ks[6], (cfg.d_ff, d), dtype=cfg.param_dtype),
+        }
+    else:
+        p["moe"] = init_moe(cfg.moe, d, ks[7], cfg.param_dtype)
+    return p
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    # Stacked layers: every leaf gets a leading (n_layers,) dim for lax.scan.
+    layers = jax.vmap(lambda k: init_layer(cfg, k))(layer_keys)
+    return {
+        "embed": embed_init(k_embed, (cfg.vocab, cfg.d_model), cfg.param_dtype),
+        "head": dense_init(k_head, (cfg.d_model, cfg.vocab), dtype=cfg.param_dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    } | {"layers": layers}
+
+
+def abstract_params(cfg: LMConfig) -> dict:
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# RoPE + attention
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) rotated by position pos (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xr1 = x1 * cos.astype(x.dtype) - x2 * sin.astype(x.dtype)
+    xr2 = x2 * cos.astype(x.dtype) + x1 * sin.astype(x.dtype)
+    return jnp.concatenate([xr1, xr2], axis=-1)
+
+
+def chunked_attention(
+    q: jax.Array,           # (B, Sq, Hkv, G, D)
+    k: jax.Array,           # (B, Skv, Hkv, D)
+    v: jax.Array,           # (B, Skv, Hkv, D)
+    *,
+    q_pos: jax.Array,       # (B, Sq) global positions of queries
+    block_kv: int,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    """Online-softmax attention over KV blocks — O(Sq·block) memory.
+
+    Pure-JAX analogue of the Pallas flash_attention kernel (kernels/
+    flash_attention/ref.py is derived from this).  Differentiable; the
+    backward pass recomputes per-block scores under remat.
+    """
+    B, Sq, Hkv, G, D = q.shape
+    Skv = k.shape[1]
+    nblk = -(-Skv // block_kv)
+    pad = nblk * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block_kv, Hkv, D)
+    vb = v.reshape(B, nblk, block_kv, Hkv, D)
+    scale = 1.0 / np.sqrt(D)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, start = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kblk).astype(jnp.float32) * scale
+        kv_pos = start + jnp.arange(block_kv)
+        mask = jnp.ones((), bool)
+        if causal:
+            mask = q_pos[:, None, None, :, None] >= kv_pos[None, None, None, None, :]
+        if window is not None:
+            mask = mask & (
+                q_pos[:, None, None, :, None] - kv_pos[None, None, None, None, :]
+                < window
+            )
+        mask = mask & (kv_pos < Skv)[None, None, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype), vblk)
+        acc_new = acc * corr[..., None].astype(q.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, Sq, D), q.dtype)
+    starts = jnp.arange(nblk) * block_kv
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kb.swapaxes(0, 1), vb.swapaxes(0, 1), starts)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4)  # (B, Sq, Hkv, G, D)
+
+
+def blocked_attention(
+    q: jax.Array,           # (B, S, H, D) — repeated-KV layout, H sharded
+    k: jax.Array,           # (B, S, H, D)
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,       # (B, S)
+    block_q: int = 512,
+    block_kv: int = 1024,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    """Flash-structured attention for train/prefill: q-blocked outer scan,
+    online-softmax inner KV sweep, per-q-block remat.
+
+    Memory: O(block_q · block_kv) score tiles + O(S · D) accumulators per
+    live block — never the S×S matrix.  K/V are closed over (scan
+    constants), so the rematted backward stores them once per layer, not
+    per block.  GQA is realized by KV-head repetition (Megatron style when
+    TP > kv_heads), which keeps the head axis shardable over "model".
+    The Pallas flash_attention kernel is the TPU-hardware twin of this
+    contraction (same tiling, same masks).
+    """
+    B, S, H, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    nq = -(-S // block_q)
+    pad_q = nq * block_q - S
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)))
+    nk = -(-Skv // block_kv)
+    pad_k = nk * block_kv - Skv
+    kk = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vv = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    kb = kk.reshape(B, nk, block_kv, H, D).swapaxes(0, 1)  # (nk, B, bk, H, D)
+    vb = vv.reshape(B, nk, block_kv, H, D).swapaxes(0, 1)
+
+    def one_q_block(q_blk, pos_blk):
+        # q_blk: (B, bq, H, D); pos_blk: (B, bq)
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            k_blk, v_blk, start = xs
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk).astype(jnp.float32)
+            s = s * scale
+            kv_pos = start + jnp.arange(block_kv)
+            mask = (kv_pos < Skv)[None, None, None, :]
+            if causal:
+                mask = mask & (
+                    pos_blk[:, None, :, None] >= kv_pos[None, None, None, :]
+                )
+            if window is not None:
+                mask = mask & (
+                    pos_blk[:, None, :, None] - kv_pos[None, None, None, :]
+                    < window
+                )
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(q_blk.dtype), v_blk)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, block_q), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        a0 = jnp.zeros((B, H, block_q, D), jnp.float32)
+        starts = jnp.arange(nk) * block_kv
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, starts))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q_blk.dtype).transpose(0, 2, 1, 3)  # (B, bq, H, D)
+
+    body = jax.checkpoint(one_q_block,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    qb = q.reshape(B, nq, block_q, H, D).swapaxes(0, 1)
+    pb = q_pos.reshape(B, nq, block_q).swapaxes(0, 1)
+    _, outs = jax.lax.scan(lambda c, xs: (c, body(*xs)), None, (qb, pb))
+    out = outs.swapaxes(0, 1).reshape(B, nq * block_q, H, D)
+    return out[:, :S]
+
+
+def attention_block(cfg: LMConfig, p: dict, x: jax.Array, pos: jax.Array,
+                    rules: ShardRules, k_cache=None, v_cache=None):
+    """Self-attention; with a cache, computes decode attention over it."""
+    B, S, d = x.shape
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(cfg.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(cfg.dtype))
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    q = rules.shard(q, ("batch", "seq", "heads", None))
+    k = rules.shard(k, ("batch", "seq", "kv_heads", None))
+
+    if k_cache is not None:
+        # decode: write current k/v at `pos`, attend over the whole cache
+        idx = pos[0, 0]  # uniform decode position across batch
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, idx, axis=1)
+        k_all, v_all = k_cache, v_cache
+    else:
+        k_all, v_all = k, v
+
+    window = cfg.window if cfg.attn == "sliding_window" else None
+    if k_cache is None and cfg.attn_impl != "grouped":
+        # train/prefill path: repeated-KV + q-blocked flash-structured attn
+        k_rep = jnp.repeat(k_all, cfg.q_per_kv, axis=2)
+        v_rep = jnp.repeat(v_all, cfg.q_per_kv, axis=2)
+        k_rep = rules.shard(k_rep, ("batch", "seq", "heads", None))
+        v_rep = rules.shard(v_rep, ("batch", "seq", "heads", None))
+        qh = q  # (B, S, H, D), heads sharded
+        out = blocked_attention(
+            qh, k_rep, v_rep, q_pos=pos,
+            block_q=min(512, S), block_kv=min(cfg.attn_block_kv, k_all.shape[1]),
+            causal=True, window=window,
+        ).reshape(B, S, cfg.n_heads, cfg.d_head)
+    else:
+        # decode path: GQA-grouped online softmax over the (large) cache
+        qg = q.reshape(B, S, cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head)
+        out = chunked_attention(
+            qg, k_all, v_all, q_pos=pos,
+            block_kv=min(cfg.attn_block_kv, k_all.shape[1]),
+            causal=True, window=window,
+        )
+    out = out.reshape(B, S, cfg.n_heads, cfg.d_head)
+    out = rules.shard(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype))
+    y = rules.shard(y, ("batch", "act_seq", "embed"))
+    return y, (k_cache, v_cache)
+
+
+def _moe_shardmap_block(cfg: LMConfig, moe_p: dict, h: jax.Array,
+                        rules: ShardRules) -> jax.Array:
+    """Expert-parallel MoE via shard_map (EP all-to-all dispatch).
+
+    Token layout follows the residual stream (batch over data axes, seq
+    over model under SP); expert weights arrive model-sharded (+FSDP d
+    shards re-gathered inside).  See moe.moe_apply_shardmap.
+    """
+    from repro.models.moe import moe_apply_shardmap
+
+    E = cfg.moe.n_experts
+    d, f = cfg.d_model, cfg.moe.d_ff_expert
+    names = rules.mesh_axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    sp = lambda logical, shape: rules.spec(logical, shape)
+    x_spec = sp(("batch", "act_seq", "embed"), h.shape)
+    pspec = {
+        "router": sp((None, None), (d, E)),
+        "wi": sp(("experts", "fsdp", None), (E, d, f)),
+        "wg": sp(("experts", "fsdp", None), (E, d, f)),
+        "wo": sp(("experts", None, "fsdp"), (E, f, d)),
+    }
+    fsdp_gather = pspec["wi"] != jax.sharding.PartitionSpec("model", None, None)
+    if cfg.moe.n_shared:
+        fs = f * cfg.moe.n_shared
+        pspec["shared_wi"] = sp((None, "ffn"), (d, fs))
+        pspec["shared_wg"] = sp((None, "ffn"), (d, fs))
+        pspec["shared_wo"] = sp(("ffn", None), (fs, d))
+
+    def body(xl, pl):
+        return moe_apply_shardmap(
+            cfg.moe, pl, xl, data_axes=data_axes, model_axis="model",
+            dtype=cfg.dtype, fsdp_gather=fsdp_gather,
+        )
+
+    fn = jax.shard_map(body, in_specs=(x_spec, pspec), out_specs=x_spec,
+                       check_vma=False)
+    return fn(h, moe_p)
+
+
+def ffn_block(cfg: LMConfig, p: dict, x: jax.Array, rules: ShardRules):
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    if cfg.moe is None:
+        f = p["ffn"]
+        z = jax.nn.silu(h @ f["wg"].astype(cfg.dtype)) * (h @ f["wi"].astype(cfg.dtype))
+        z = rules.shard(z, ("batch", "seq", "ffn"))
+        y = z @ f["wo"].astype(cfg.dtype)
+    elif cfg.moe.impl == "shardmap":
+        y = _moe_shardmap_block(cfg, p["moe"], h, rules)
+    else:
+        y = moe_apply(cfg.moe, p["moe"], h, rules, cfg.dtype)
+    return rules.shard(y, ("batch", "act_seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _layer_fn(cfg: LMConfig, rules: ShardRules, carry, layer_p, cache_slice=None):
+    x, pos = carry
+    kc, vc = (None, None) if cache_slice is None else cache_slice
+    a, (kc, vc) = attention_block(cfg, layer_p, x, pos, rules, kc, vc)
+    x = x + a
+    x = x + ffn_block(cfg, layer_p, x, rules)
+    return (x, pos), (kc, vc)
+
+
+def _cast_layers(cfg: LMConfig, params: dict, rules: ShardRules = NO_SHARD):
+    """Cast the stacked layer params to compute dtype ONCE (outside remat),
+    so FSDP all-gathers move bf16, not fp32 masters.
+
+    The cast stack is re-constrained to the parameter PartitionSpecs
+    (`rules.layer_specs`, attached by launch/cells.py) — otherwise XLA may
+    hoist the per-layer FSDP all-gather out of the scan and keep ALL layers
+    gathered simultaneously (observed: +15 GB/device on mistral-large)."""
+    from repro.models.common import tree_cast
+
+    layers = tree_cast(params["layers"], cfg.dtype)
+    specs = getattr(rules, "layer_specs", None)
+    if specs is not None:
+        layers = jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), layers, specs
+        )
+    return layers
+
+
+def forward(cfg: LMConfig, params: dict, tokens: jax.Array,
+            rules: ShardRules = NO_SHARD) -> jax.Array:
+    """Training/prefill forward: tokens (B, S) → logits (B, S, V)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"].astype(cfg.dtype), tokens, axis=0)
+    x = rules.shard(x, ("batch", "act_seq", "embed"))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    layers = _cast_layers(cfg, params, rules)
+
+    def body(carry, layer_p):
+        fn = _layer_fn
+        if cfg.remat:
+            fn = jax.checkpoint(
+                partial(_layer_fn, cfg, rules),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )
+            out, _ = fn(carry, layer_p)
+        else:
+            out, _ = _layer_fn(cfg, rules, carry, layer_p)
+        return out, None
+
+    (x, _), _ = jax.lax.scan(body, (x, pos), layers,
+                             unroll=cfg.n_layers if cfg.unroll else 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(cfg.dtype))
+    return rules.shard(logits, ("batch", "seq", "vocab"))
+
+
+def loss_fn(cfg: LMConfig, params: dict, batch: dict,
+            rules: ShardRules = NO_SHARD) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"], rules).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving (KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_seq: int) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, cfg.dtype),
+        "v": jax.ShapeDtypeStruct(shape, cfg.dtype),
+    }
+
+
+def prefill(cfg: LMConfig, params: dict, tokens: jax.Array,
+            rules: ShardRules = NO_SHARD) -> tuple[jax.Array, dict]:
+    """Prefill: full forward that also returns the populated KV cache."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"].astype(cfg.dtype), tokens, axis=0)
+    x = rules.shard(x, ("batch", "act_seq", "embed"))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    # Per-layer K/V of the current tokens become the cache; they are
+    # recomputed outside the layer fn so remat stays simple.
+    def body_cache(carry, layer_p):
+        x, pos = carry
+        h = rms_norm(x, layer_p["attn_norm"], cfg.norm_eps)
+        k = jnp.einsum("bsd,dhk->bshk", h, layer_p["wk"].astype(cfg.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, layer_p["wv"].astype(cfg.dtype))
+        k = rope(k, pos, cfg.rope_theta)
+        (x, pos), _ = _layer_fn(cfg, rules, (x, pos), layer_p, None)
+        return (x, pos), (k, v)
+
+    (x, _), (ks, vs) = jax.lax.scan(body_cache, (x, pos),
+                                    _cast_layers(cfg, params, rules),
+                                    unroll=cfg.n_layers if cfg.unroll else 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["head"].astype(cfg.dtype))
+    cache = {"k": rules.shard(ks, (None, "batch", "seq", "kv_heads", None)),
+             "v": rules.shard(vs, (None, "batch", "seq", "kv_heads", None))}
+    return logits, cache
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: dict, tokens: jax.Array,
+                pos_scalar: jax.Array, rules: ShardRules = NO_SHARD):
+    """One decode step: tokens (B, 1) at position pos → logits, new cache."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"].astype(cfg.dtype), tokens, axis=0)
+    x = rules.shard(x, ("batch", None, "embed"))
+    pos = jnp.broadcast_to(pos_scalar, (B, S))
+
+    def body(carry, xs):
+        layer_p, kc, vc = xs
+        (x, pos), (kc, vc) = _layer_fn(cfg, rules, carry, layer_p, (kc, vc))
+        return (x, pos), (kc, vc)
+
+    (x, _), (ks, vs) = jax.lax.scan(
+        body, (x, pos), (_cast_layers(cfg, params), cache["k"], cache["v"]),
+        unroll=cfg.n_layers if cfg.unroll else 1,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(cfg.dtype))
+    return logits, {"k": ks, "v": vs}

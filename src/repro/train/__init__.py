@@ -1,0 +1,8 @@
+"""Training substrate: optimizers, gradient compression, checkpointing, loop."""
+
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+)

@@ -1,0 +1,25 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device
+(multi-device behaviour is exercised via subprocesses in test_distributed).
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def box443():
+    from repro.mesh import box_mesh
+
+    return box_mesh(4, 4, 3)
+
+
+@pytest.fixture(scope="session")
+def grid16():
+    from repro.mesh import grid_graph_2d
+
+    return grid_graph_2d(16, 16)

@@ -1,0 +1,134 @@
+"""Fiedler solvers: Lanczos, inverse iteration (flexcg + AMG) vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    amg_setup,
+    ell_laplacian,
+    fiedler_from_graph,
+    fiedler_from_mesh,
+    fiedler_oracle_np,
+    flexcg,
+    dense_laplacian_np,
+)
+from repro.mesh import box_mesh, dual_graph, grid_graph_2d, grid_graph_3d
+
+
+def _check_eigpair(graph, res, tol=2e-2):
+    lam, _ = fiedler_oracle_np(graph)
+    assert res.eigenvalue == pytest.approx(lam, rel=tol, abs=1e-4)
+
+
+def test_lanczos_grid(grid16):
+    res = fiedler_from_graph(grid16, method="lanczos", tol=1e-4)
+    _check_eigpair(grid16, res)
+
+
+def test_inverse_grid(grid16):
+    res = fiedler_from_graph(grid16, method="inverse", tol=1e-4)
+    _check_eigpair(grid16, res)
+
+
+def test_lanczos_3d():
+    g = grid_graph_3d(8, 8, 8)
+    res = fiedler_from_graph(g, method="lanczos", tol=1e-3)
+    _check_eigpair(g, res, tol=5e-2)
+
+
+def test_mesh_gs_lanczos():
+    """Matrix-free gather-scatter Lanczos on a box dual graph."""
+    m = box_mesh(6, 6, 6)
+    g = dual_graph(m)
+    res = fiedler_from_mesh(m.vert_gid, method="lanczos", tol=1e-3)
+    lam, _ = fiedler_oracle_np(g)
+    assert res.eigenvalue == pytest.approx(lam, rel=5e-2, abs=1e-3)
+
+
+def test_fiedler_vector_orthogonal_to_ones(grid16):
+    res = fiedler_from_graph(grid16, method="lanczos", tol=1e-4)
+    assert abs(res.vector.sum()) < 1e-2 * np.linalg.norm(res.vector) * np.sqrt(grid16.n)
+
+
+def test_flexcg_identity_precond_solves(grid16):
+    """flexcg solves L x = b (b ⊥ 1) without preconditioning."""
+    op = ell_laplacian(grid16)
+    rng = np.random.default_rng(0)
+    b = rng.normal(size=grid16.n).astype(np.float32)
+    b -= b.mean()
+    res = jax.jit(lambda bb: flexcg(op.apply, bb, tol=1e-6, maxiter=2000))(
+        jnp.asarray(b)
+    )
+    x = np.asarray(res.x)
+    np.testing.assert_allclose(
+        np.asarray(op.apply(jnp.asarray(x))), b, atol=5e-3
+    )
+
+
+def test_flexcg_single_iteration_on_eigvector(grid16):
+    """Paper §7 (claim C5): when b IS an eigenvector, the L-Krylov space is
+    invariant and flexcg (unpreconditioned first direction) converges in
+    one iteration."""
+    lam, y2 = fiedler_oracle_np(grid16)
+    op = ell_laplacian(grid16)
+    b = jnp.asarray(y2.astype(np.float32))
+    pre = amg_setup(grid16)
+    res = flexcg(op.apply, b, precond=pre, tol=1e-4, maxiter=100)
+    assert int(res.iters) <= 2  # 1 + possible roundoff iteration
+
+
+def test_amg_accelerates_cg(grid16):
+    """AMG-preconditioned flexcg needs fewer iterations than plain CG."""
+    op = ell_laplacian(grid16)
+    rng = np.random.default_rng(1)
+    b = rng.normal(size=grid16.n).astype(np.float32)
+    b -= b.mean()
+    b = jnp.asarray(b)
+    plain = flexcg(op.apply, b, tol=1e-6, maxiter=2000)
+    pre = amg_setup(grid16)
+    amg = flexcg(op.apply, b, precond=pre, tol=1e-6, maxiter=2000)
+    assert int(amg.iters) < int(plain.iters)
+    assert float(amg.resnorm) <= 1e-5 * max(float(jnp.linalg.norm(b)), 1.0)
+
+
+def test_amg_vcycle_reduces_residual(grid16):
+    """One V-cycle contracts the error of L u = r."""
+    pre = amg_setup(grid16)
+    op = ell_laplacian(grid16)
+    rng = np.random.default_rng(2)
+    r = rng.normal(size=grid16.n).astype(np.float32)
+    r -= r.mean()
+    u = pre(jnp.asarray(r))
+    res = np.asarray(r - np.asarray(op.apply(u)))
+    assert np.linalg.norm(res) < 0.9 * np.linalg.norm(r)
+
+
+def test_galerkin_coarsening_preserves_laplacian(grid16):
+    """Coarse operators keep zero row sums + nonpositive off-diagonals."""
+    from repro.core import coarsen_graph
+
+    agg = np.arange(grid16.n) // 2
+    gc = coarsen_graph(grid16, agg, (grid16.n + 1) // 2)
+    Lc = dense_laplacian_np(gc)
+    np.testing.assert_allclose(Lc.sum(1), 0, atol=1e-9)
+    off = Lc - np.diag(np.diag(Lc))
+    assert (off <= 1e-12).all()
+
+
+def test_degenerate_fiedler_pair_sweep():
+    """Paper §9 (implemented): on a checkerboard-degenerate N×N grid,
+    deflated Lanczos recovers BOTH members of the λ₂ eigenspace and the
+    θ-sweep finds a near-optimal straight cut where a single arbitrary
+    eigenvector may give a diagonal (≈2N) cut."""
+    from repro.core import best_cut_in_pair, fiedler_pair_from_graph
+    from repro.mesh import grid_graph_2d
+
+    N = 20
+    g = grid_graph_2d(N, N)
+    y1, y2, l2, l3 = fiedler_pair_from_graph(g, seed=3)
+    assert abs(l2 - l3) < 1e-3 * max(l2, 1e-9)        # degenerate pair
+    assert abs(float(y1 @ y2)) < 1e-5                 # orthogonal
+    v, theta, cut = best_cut_in_pair(g, y1, y2)
+    assert cut <= N + 2                               # near-optimal straight cut

@@ -1,0 +1,123 @@
+"""RSB driver + geometric baselines: balance (claim C1), quality ordering,
+weighted-vs-unweighted (C6), multi-material weighting."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    partition,
+    partition_metrics,
+    rcb_parts,
+    rib_parts,
+    rsb_partition_graph,
+    rsb_partition_mesh,
+    sfc_parts,
+)
+from repro.mesh import box_mesh, dual_graph, grid_graph_2d, pebble_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh_and_graph():
+    m = box_mesh(8, 8, 4)
+    return m, dual_graph(m)
+
+
+def test_rsb_balance_every_level(mesh_and_graph):
+    """Eq. 2.6: ≤1 element imbalance for unit weights, every P."""
+    m, g = mesh_and_graph
+    for nparts in (2, 3, 8):
+        parts, _ = rsb_partition_mesh(m, nparts, tol=1e-2, max_restarts=10)
+        counts = np.bincount(parts, minlength=nparts)
+        assert counts.max() - counts.min() <= 1, (nparts, counts)
+        assert set(np.unique(parts)) == set(range(nparts))
+
+
+def test_rsb_beats_random_cut(mesh_and_graph):
+    m, g = mesh_and_graph
+    parts, _ = rsb_partition_mesh(m, 8, tol=1e-3)
+    rsb = partition_metrics(g, parts, 8)
+    rnd = partition_metrics(g, partition(m, 8, partitioner="random"), 8)
+    assert rsb.edge_cut < 0.5 * rnd.edge_cut
+    assert rsb.total_volume < rnd.total_volume
+
+
+def test_rsb_competitive_with_rcb(mesh_and_graph):
+    """Spectral should match or beat geometric cut on a box mesh."""
+    m, g = mesh_and_graph
+    parts, _ = rsb_partition_mesh(m, 8, tol=1e-3)
+    rsb = partition_metrics(g, parts, 8)
+    rcb = partition_metrics(g, rcb_parts(m.coords, 8), 8)
+    assert rsb.edge_cut <= 1.25 * rcb.edge_cut  # same ballpark or better
+
+
+def test_geometric_partitioners_balance(mesh_and_graph):
+    m, _ = mesh_and_graph
+    for fn in (rcb_parts, rib_parts, sfc_parts):
+        parts = fn(m.coords, 8)
+        counts = np.bincount(parts, minlength=8)
+        assert counts.max() - counts.min() <= 1, fn.__name__
+
+
+def test_weighted_elements_balance():
+    """Multi-material: weighted splits balance WEIGHT, not count."""
+    m = pebble_mesh(8, 8, 8, n_pebbles=3, seed=1)
+    assert (m.weights > 1).any()
+    parts, _ = rsb_partition_mesh(m, 4, tol=1e-2, max_restarts=10)
+    wsum = np.bincount(parts, weights=m.weights, minlength=4)
+    assert wsum.max() / wsum.mean() < 1.1
+
+
+def test_graph_rsb_matches_mesh_rsb_quality(mesh_and_graph):
+    """RSB on the assembled dual graph ≈ RSB on the matrix-free mesh."""
+    m, g = mesh_and_graph
+    pm, _ = rsb_partition_mesh(m, 4, tol=1e-3)
+    pg, _ = rsb_partition_graph(g, 4, coords=m.coords, tol=1e-3)
+    qm = partition_metrics(g, pm, 4).edge_cut
+    qg = partition_metrics(g, pg, 4).edge_cut
+    assert qg <= 1.3 * qm and qm <= 1.3 * qg
+
+
+def test_unweighted_vs_weighted_cut(mesh_and_graph):
+    """Claim C6: the weighted Laplacian targets comm volume — its ω-cut
+    should not be worse than the unweighted variant's."""
+    m, g = mesh_and_graph
+    pw, _ = rsb_partition_mesh(m, 4, laplacian="weighted", tol=1e-3)
+    pu, _ = rsb_partition_mesh(m, 4, laplacian="unweighted", tol=1e-3)
+    qw = partition_metrics(g, pw, 4).total_volume
+    qu = partition_metrics(g, pu, 4).total_volume
+    assert qw <= 1.15 * qu
+
+
+def test_partition_front_door(mesh_and_graph):
+    m, g = mesh_and_graph
+    for name in ("rcb", "rib", "sfc", "random"):
+        parts = partition(m, 4, partitioner=name)
+        assert parts.shape == (m.nelems,)
+        assert parts.max() == 3
+
+
+def test_rcb_order_is_permutation():
+    m = box_mesh(5, 4, 3)
+    from repro.core import rcb_order
+
+    order = rcb_order(m.coords)
+    assert sorted(order.tolist()) == list(range(m.nelems))
+
+
+def test_grid_graph_rsb_cut_near_optimal(grid16):
+    """On a 16×16 grid the optimal bisection cut is 16 (a straight line);
+    RSB should land within 2× even with degeneracy (paper §9)."""
+    parts, _ = rsb_partition_graph(grid16, 2, tol=1e-4)
+    pm = partition_metrics(grid16, parts, 2)
+    assert pm.edge_cut <= 32
+    assert pm.imbalance <= 1
+
+
+def test_warm_start_reduces_restarts(mesh_and_graph):
+    """Beyond-paper: geometric warm start cuts Lanczos restarts without
+    hurting quality."""
+    m, g = mesh_and_graph
+    _, rep_cold = rsb_partition_mesh(m, 8, tol=1e-3, warm_start=False)
+    p_warm, rep_warm = rsb_partition_mesh(m, 8, tol=1e-3, warm_start=True)
+    assert rep_warm.total_iterations <= rep_cold.total_iterations
+    assert partition_metrics(g, p_warm, 8).imbalance <= 1

@@ -1,0 +1,129 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition_metrics, rcb_order, rcb_parts, sfc_parts
+from repro.core.gather_scatter import aw_apply, gs_setup
+from repro.core.rsb import _proportional_split
+from repro.mesh.graphs import build_csr
+from repro.core.sfc import hilbert_index
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    n=st.integers(8, 64),
+    nparts=st.integers(2, 8),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_rcb_parts_cover_and_balance(n, nparts, seed):
+    rng = np.random.default_rng(seed)
+    coords = rng.normal(size=(n, 3))
+    parts = rcb_parts(coords, nparts)
+    assert parts.shape == (n,)
+    assert parts.min() >= 0 and parts.max() < nparts
+    counts = np.bincount(parts, minlength=nparts)
+    assert counts.max() - counts.min() <= 1
+
+
+@given(n=st.integers(4, 80), seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_rcb_order_permutation(n, seed):
+    coords = np.random.default_rng(seed).normal(size=(n, 3))
+    order = rcb_order(coords)
+    assert sorted(order.tolist()) == list(range(n))
+
+
+@given(n=st.integers(8, 64), seed=st.integers(0, 500),
+       nparts=st.integers(2, 6))
+@settings(**SETTINGS)
+def test_sfc_parts_balance(n, seed, nparts):
+    coords = np.random.default_rng(seed).normal(size=(n, 3))
+    parts = sfc_parts(coords, nparts)
+    counts = np.bincount(parts, minlength=nparts)
+    assert counts.max() - counts.min() <= 1
+
+
+@given(seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_hilbert_locality_beats_random(seed):
+    """Successive Hilbert-ordered points are spatially closer on average
+    than randomly ordered ones (the property SFC partitioning relies on)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(size=(128, 3))
+    order = np.argsort(hilbert_index(pts, bits=8), kind="stable")
+    d_h = np.linalg.norm(np.diff(pts[order], axis=0), axis=1).mean()
+    d_r = np.linalg.norm(np.diff(pts, axis=0), axis=1).mean()
+    assert d_h < d_r
+
+
+@given(
+    e=st.integers(4, 40),
+    k=st.integers(2, 8),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_gs_self_cancellation(e, k, seed):
+    """L·x is invariant to adding fresh singleton ids: padding elements with
+    unique gids contribute exactly zero (paper's singleton property)."""
+    rng = np.random.default_rng(seed)
+    gid = rng.integers(0, e, size=(e, k))
+    h = gs_setup(gid)
+    ones = jnp.ones((e,), jnp.float32)
+    deg = aw_apply(h, ones)
+    x = jnp.asarray(rng.normal(size=e), jnp.float32)
+    lap = deg * x - aw_apply(h, x)
+    # row sums of the implied Laplacian are zero
+    assert abs(float((deg * ones - aw_apply(h, ones)).sum())) < 1e-3
+    # symmetry of the quadratic form
+    y = jnp.asarray(rng.normal(size=e), jnp.float32)
+    ly = deg * y - aw_apply(h, y)
+    assert abs(float(jnp.vdot(x, ly)) - float(jnp.vdot(y, lap))) < 1e-2 * (
+        1 + abs(float(jnp.vdot(x, ly)))
+    )
+
+
+@given(
+    n=st.integers(6, 60),
+    seed=st.integers(0, 1000),
+    n_left=st.integers(1, 5),
+)
+@settings(**SETTINGS)
+def test_proportional_split_conserves(n, seed, n_left):
+    rng = np.random.default_rng(seed)
+    keys = rng.normal(size=n)
+    w = np.ones(n)
+    n_total = n_left + rng.integers(1, 5)
+    lo, hi = _proportional_split(keys, w, n_left, n_total)
+    assert len(lo) + len(hi) == n
+    assert len(set(lo.tolist()) | set(hi.tolist())) == n
+    # split ratio tracks n_left/n_total within one element
+    assert abs(len(lo) - n * n_left / n_total) <= 1
+
+
+@given(
+    n=st.integers(6, 40),
+    m=st.integers(5, 80),
+    nparts=st.integers(2, 5),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_metrics_conservation(n, m, nparts, seed):
+    """Edge cut + internal weight = total weight; volumes symmetric."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    g = build_csr(src, dst, n)
+    if g.nnz == 0:
+        return
+    parts = rng.integers(0, nparts, n)
+    pm = partition_metrics(g, parts, nparts)
+    total_w = g.weights.sum() / 2
+    internal = total_w - pm.edge_cut
+    assert 0 <= pm.edge_cut <= total_w + 1e-9
+    assert internal >= -1e-9
+    # total outgoing volume counts each cut edge twice (once per side)
+    assert abs(pm.total_volume - 2 * pm.edge_cut) < 1e-9
