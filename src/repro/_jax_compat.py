@@ -1,0 +1,133 @@
+"""Forward-compatibility shims for older JAX (< 0.5) installs.
+
+The repo's distributed code and tests target the modern single-controller
+API surface:
+
+  * ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)``
+  * ``jax.set_mesh(mesh)`` as a context manager providing the ambient mesh
+  * ``jax.shard_map(f, mesh=None, in_specs=..., out_specs=..., check_vma=...)``
+
+On an old install (e.g. 0.4.x, where only ``jax.experimental.shard_map``
+with ``check_rep`` exists) :func:`install` grafts equivalent names onto the
+``jax`` namespace so the same source runs on both.  On a new install it is
+a no-op.  ``repro/__init__.py`` calls it on import, and ``src/sitecustomize
+.py`` calls it at interpreter startup for any process launched with
+``PYTHONPATH=src`` (the repo's documented invocation), which covers test
+subprocesses that touch ``jax.sharding.AxisType`` before importing repro.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+import threading
+
+_installed = False
+_ambient = threading.local()
+
+
+def ambient_mesh():
+    """The mesh most recently entered via the shimmed ``jax.set_mesh``."""
+    return getattr(_ambient, "mesh", None)
+
+
+def install() -> None:
+    """Idempotently install the new-API names onto old ``jax``."""
+    global _installed
+    if _installed:
+        return
+
+    import jax
+    import jax.sharding as jshard
+
+    if not hasattr(jshard, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jshard.AxisType = AxisType
+
+    if (hasattr(jax, "make_mesh")
+            and "axis_types" not in inspect.signature(jax.make_mesh).parameters):
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            # Only Auto is advisory; Explicit/Manual semantics don't exist
+            # on old JAX, so fail loudly rather than silently diverge.
+            for t in axis_types or ():
+                if t is not None and getattr(t, "name", t) != "Auto":
+                    raise NotImplementedError(
+                        f"axis_type {t} requires a newer JAX; only "
+                        "AxisType.Auto is supported by the compat shim"
+                    )
+            return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        class _SetMesh:
+            """Usable both ways, like the modern API: a bare
+            ``jax.set_mesh(mesh)`` call sets the ambient mesh globally;
+            ``with jax.set_mesh(mesh):`` additionally scopes it (and the
+            Mesh resource context) to the block."""
+
+            def __init__(self, mesh):
+                self.mesh = mesh
+                self._prev = ambient_mesh()
+                self._entered = False
+                _ambient.mesh = mesh        # effective immediately
+
+            def __enter__(self):
+                # The Mesh context lets with_sharding_constraint accept
+                # bare PartitionSpecs.
+                self.mesh.__enter__()
+                self._entered = True
+                return self.mesh
+
+            def __exit__(self, *exc):
+                _ambient.mesh = self._prev
+                if self._entered:
+                    self._entered = False
+                    return self.mesh.__exit__(*exc)
+
+        jax.set_mesh = _SetMesh
+
+    if not hasattr(jax.lax, "axis_size"):
+        import jax.core as _core
+
+        def axis_size(axis_name):
+            names = (
+                axis_name if isinstance(axis_name, (tuple, list)) else (axis_name,)
+            )
+            size = 1
+            for n in names:
+                size *= int(_core.axis_frame(n))  # returns the size on 0.4.x
+            return size
+
+        jax.lax.axis_size = axis_size
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, *, in_specs, out_specs, check_vma=None,
+                      check_rep=None, auto=frozenset()):
+            if mesh is None:
+                mesh = ambient_mesh()
+                if mesh is None:
+                    raise ValueError(
+                        "shard_map: no mesh argument and no ambient mesh — "
+                        "wrap the call in `with jax.set_mesh(mesh):`"
+                    )
+            if check_rep is None:
+                # Mirror both APIs' defaults (True) so a program that fails
+                # new JAX's vma check also fails here, not first in CI.
+                check_rep = bool(check_vma) if check_vma is not None else True
+            return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                              check_rep=check_rep, auto=auto)
+
+        jax.shard_map = shard_map
+
+    _installed = True  # only latch success once every shim is applied

@@ -27,7 +27,10 @@ edge neighbor 2 − 1 + 0 = 1; a vertex neighbor 1 − 0 + 0 = 1).
 Setup (`gs_setup`) is host-side NumPy: it only compacts global ids to a
 contiguous range — "minimal setup cost", as the paper stresses.  The apply
 (`gs_op`) is pure jittable JAX: one `segment_sum` + one `take`.  The
-distributed (shard_map) variants live in `repro.dist.collectives`.
+distributed (shard_map) variant is
+`repro.dist.collectives.dist_lap_apply_allreduce`: the same segment_sum
+into the global-id space, completed by one `psum` over the mesh axis
+(verified against `GSLaplacian.apply` in tests/test_distributed.py).
 """
 
 from __future__ import annotations

@@ -144,7 +144,9 @@ def rsb_partition_graph(
     """Partition a generic graph (assembled ELL Laplacian) via RSB.
 
     This is the entry point the framework's partition-aware GNN sharding
-    uses (`repro.dist.partition_aware`).
+    uses: feed the returned `parts` to
+    `repro.dist.partition_aware.plan_halo_sharding` to get the shard_map
+    halo plan whose all_gather volume is proportional to this cut.
     """
     n = graph.n
     w = np.ones(n) if weights is None else np.asarray(weights, np.float64)

@@ -1,0 +1,49 @@
+"""repro.dist: the distribution layer.
+
+Three pieces, one story — the paper's partitioner output drives the
+framework's communication:
+
+* :mod:`repro.dist.partition_aware` — halo sharding plans; a partition's
+  edge cut becomes the all_gather volume of each message-passing sweep.
+* :mod:`repro.dist.collectives` — the distributed gather-scatter Laplacian
+  (paper §5 under shard_map) and a hand-rolled ring all-reduce reference.
+* :mod:`repro.dist.sharding` — logical-axis → mesh-axis PartitionSpec
+  rules for the LM / GNN / recsys model families.
+"""
+
+from repro.dist.collectives import dist_lap_apply_allreduce, ring_allreduce
+from repro.dist.partition_aware import (
+    HaloPlan,
+    adjacency_matvec_distributed,
+    gather_features,
+    halo_exchange,
+    plan_halo_sharding,
+    scatter_features,
+)
+from repro.dist.sharding import (
+    MeshRules,
+    batch_specs_lm,
+    cache_specs_lm,
+    gnn_rules,
+    lm_rules,
+    param_specs_lm,
+    recsys_rules,
+)
+
+__all__ = [
+    "HaloPlan",
+    "MeshRules",
+    "adjacency_matvec_distributed",
+    "batch_specs_lm",
+    "cache_specs_lm",
+    "dist_lap_apply_allreduce",
+    "gather_features",
+    "gnn_rules",
+    "halo_exchange",
+    "lm_rules",
+    "param_specs_lm",
+    "plan_halo_sharding",
+    "recsys_rules",
+    "ring_allreduce",
+    "scatter_features",
+]

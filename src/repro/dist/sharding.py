@@ -1,0 +1,211 @@
+"""Logical-axis → mesh-axis sharding rules for every model family.
+
+Models annotate activations and params with *logical* axis names
+(``"batch"``, ``"heads"``, ``"experts"`` …) through the
+:class:`repro.models.common.ShardRules` hook; this module maps them onto
+the physical mesh axes (``"pod"``, ``"data"``, ``"model"``).  The mapping
+is divisibility-guarded: a logical axis whose dimension does not divide the
+mesh-axis size silently degrades to replicated, so one rule set serves
+every config from the 1.1B dense LM to the 123B GQA model.
+
+``launch/cells.py`` consumes the whole surface (`lm_rules`, `gnn_rules`,
+`recsys_rules`, `param_specs_lm`, `cache_specs_lm`, `batch_specs_lm`);
+``transformer.loss_fn`` threads a :class:`MeshRules` through every block,
+including the shard_map expert-parallel MoE path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ShardRules
+
+
+class MeshRules(ShardRules):
+    """Concrete ShardRules bound to a mesh and a logical→physical table.
+
+    ``table`` maps logical names to a mesh axis (str), a tuple of mesh axes
+    (sharded over their product), or None (replicated).  ``layer_specs``
+    is attached by ``launch/cells.py`` so the fp32→bf16 parameter cast can
+    be re-constrained to the FSDP layout (see transformer._cast_layers).
+    """
+
+    def __init__(self, mesh, table: dict):
+        self.mesh = mesh
+        self.table = dict(table)
+        self.layer_specs = None
+
+    @property
+    def mesh_axis_names(self) -> tuple:
+        return tuple(self.mesh.axis_names)
+
+    def _axes_for(self, name):
+        ent = self.table.get(name)
+        if ent is None:
+            return None
+        if isinstance(ent, str):
+            ent = (ent,)
+        ent = tuple(a for a in ent if a in self.mesh.axis_names)
+        return ent or None
+
+    def spec(self, logical, shape=None) -> P:
+        """PartitionSpec for a tuple of logical axis names.
+
+        Each mesh axis is used at most once (first logical wins) and a dim
+        that is not divisible by its mesh-axis product stays replicated.
+        """
+        used: set = set()
+        dims = []
+        for i, name in enumerate(logical):
+            axes = self._axes_for(name) if name is not None else None
+            if axes:
+                axes = tuple(a for a in axes if a not in used)
+            if axes and shape is not None:
+                size = int(np.prod([self.mesh.shape[a] for a in axes]))
+                if int(shape[i]) % size != 0:
+                    axes = None
+            if axes:
+                used.update(axes)
+                dims.append(axes[0] if len(axes) == 1 else axes)
+            else:
+                dims.append(None)
+        return P(*dims)
+
+    def shard(self, x: jax.Array, logical) -> jax.Array:
+        spec = self.spec(logical, x.shape)
+        if all(d is None for d in spec):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+
+def _data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _model_axis(mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+def lm_rules(mesh, *, seq_shard: bool = True) -> MeshRules:
+    """Transformer LM rules: DP over pod/data, TP(+SP) over model.
+
+    ``seq_shard`` shards the residual stream's sequence dim over the model
+    axis between attention/FFN blocks (sequence parallelism); heads, FFN,
+    vocab and experts shard over model; expert weights FSDP over data.
+    """
+    model = _model_axis(mesh)
+    data = _data_axes(mesh)
+    return MeshRules(mesh, {
+        "batch": data,
+        "act_seq": model if seq_shard else None,
+        "seq": None,
+        "heads": model,
+        "kv_heads": model,
+        "embed": None,
+        "ffn": model,
+        "vocab": model,
+        "experts": model,
+        "expert_ffn": None,
+        "fsdp": data,
+    })
+
+
+def gnn_rules(mesh) -> MeshRules:
+    """GNN rules: nodes/edges stripe over every mesh axis (graph DP)."""
+    every = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    return MeshRules(mesh, {
+        "nodes": every,
+        "edges": every,
+        "batch": _data_axes(mesh),
+    })
+
+
+def recsys_rules(mesh) -> MeshRules:
+    """Recsys rules: user batch over data axes, item vocab over model."""
+    return MeshRules(mesh, {
+        "batch": _data_axes(mesh),
+        "vocab": _model_axis(mesh),
+    })
+
+
+# ---------------------------------------------------------------------------
+# LM param / cache / batch PartitionSpecs (launch + checkpoint reshard)
+# ---------------------------------------------------------------------------
+
+_LAYER_LOGICAL = {
+    "attn_norm": (None,),
+    "ffn_norm": (None,),
+    "wq": (None, "heads", None),
+    "wk": (None, "kv_heads", None),
+    "wv": (None, "kv_heads", None),
+}
+_FFN_LOGICAL = {
+    "wi": (None, "ffn"),
+    "wg": (None, "ffn"),
+    "wo": ("ffn", None),
+}
+_MOE_LOGICAL = {
+    "router": (None, None),
+    "wi": ("experts", "fsdp", None),
+    "wg": ("experts", "fsdp", None),
+    "wo": ("experts", None, "fsdp"),
+    "shared_wi": (None, "ffn"),
+    "shared_wg": (None, "ffn"),
+    "shared_wo": ("ffn", None),
+}
+
+
+def param_specs_lm(cfg, params_abs, mesh) -> dict:
+    """PartitionSpec tree for an LM parameter tree (stacked layers).
+
+    Attention/FFN/expert weights shard over "model" (tensor parallel),
+    expert weights additionally FSDP over the data axes, embed/head over
+    the vocab dim; everything divisibility-guarded by the actual shapes.
+    """
+    rules = lm_rules(mesh)
+
+    def one(path, leaf):
+        keys = [k.key for k in path if hasattr(k, "key")]
+        name, parent = keys[-1], (keys[-2] if len(keys) > 1 else None)
+        if name == "embed":
+            logical = ("vocab", None)
+        elif name == "head":
+            logical = (None, "vocab")
+        elif name == "final_norm":
+            logical = (None,)
+        elif parent == "ffn":
+            logical = _FFN_LOGICAL[name]
+        elif parent == "moe":
+            logical = _MOE_LOGICAL[name]
+        elif name in _LAYER_LOGICAL:
+            logical = _LAYER_LOGICAL[name]
+        elif name == "wo":
+            logical = ("heads", None, None)   # attention out-projection
+        else:
+            logical = (None,) * (len(leaf.shape) - int(keys[0] == "layers"))
+        if keys[0] == "layers":
+            logical = (None,) + tuple(logical)  # leading (n_layers,) stack
+        return rules.spec(logical, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params_abs)
+
+
+def cache_specs_lm(cfg, mesh) -> dict:
+    """KV-cache specs: (layers, batch, seq, kv_heads, d_head)."""
+    data = _data_axes(mesh)
+    model = _model_axis(mesh)
+    if model is not None and cfg.n_kv_heads % mesh.shape[model] != 0:
+        model = None
+    spec = P(None, data if data else None, None, model, None)
+    return {"k": spec, "v": spec}
+
+
+def batch_specs_lm(mesh) -> dict:
+    """Token batch specs: batch dim over the data axes."""
+    data = _data_axes(mesh)
+    spec = P(data if data else None, None)
+    return {"tokens": spec, "labels": spec}

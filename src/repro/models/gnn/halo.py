@@ -19,6 +19,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.dist.partition_aware import halo_exchange
 from repro.models.common import mlp_apply
 from repro.models.gnn.graphcast import GraphCastConfig, _mlp_ln
 
@@ -38,12 +39,6 @@ class HaloBatch:
     edge_mask: jax.Array     # (P, max_edges)
 
 
-def _gather_combined(h_loc, export_idx, export_mask, axis_name):
-    exported = jnp.take(h_loc, export_idx, axis=0) * export_mask[:, None]
-    buf = jax.lax.all_gather(exported, axis_name, axis=0, tiled=False)
-    return jnp.concatenate([h_loc, buf.reshape(-1, h_loc.shape[-1])], axis=0)
-
-
 def graphcast_halo_local(cfg: GraphCastConfig, params: dict, b, axis_name):
     """Forward on ONE shard's block (call inside shard_map; b fields have
     their leading shard dim already stripped)."""
@@ -54,7 +49,7 @@ def graphcast_halo_local(cfg: GraphCastConfig, params: dict, b, axis_name):
 
     def body(carry, layer_p):
         h, e = carry
-        combined = _gather_combined(h, b.export_idx, b.export_mask, axis_name)
+        combined = halo_exchange(h, b.export_idx, b.export_mask, axis_name)
         hs = jnp.take(combined, b.edge_src, axis=0)
         hd = jnp.take(h, b.edge_dst, axis=0)
         e = e + _mlp_ln(layer_p["edge"], jnp.concatenate([e, hs, hd], -1))

@@ -1,0 +1,74 @@
+"""Interpreter-startup hook for processes launched with ``PYTHONPATH=src``
+(the repo's documented invocation for tests, examples and benchmarks).
+
+Installs repro's JAX forward-compat shims (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.AxisType`` …) so code using the modern
+API works unmodified on an old JAX install.  The install is deferred via a
+meta-path hook until ``jax`` itself is first imported — startup of
+processes that never touch JAX stays unchanged.  A no-op on new JAX;
+``repro/__init__.py`` installs the shims too, as a belt-and-braces backup.
+"""
+
+import sys
+
+
+class _JaxCompatFinder:
+    """Meta-path finder that runs the compat install right after ``jax``
+    finishes importing, then gets out of the way."""
+
+    def find_spec(self, fullname, path=None, target=None):
+        if fullname != "jax" or self not in sys.meta_path:
+            return None
+        import importlib.util
+
+        sys.meta_path.remove(self)  # avoid recursion; one-shot hook
+        spec = importlib.util.find_spec("jax")
+        if spec is not None and spec.loader is not None:
+            spec.loader = _InstallAfterLoader(spec.loader)
+        return spec
+
+
+class _InstallAfterLoader:
+    def __init__(self, inner):
+        self._inner = inner
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def create_module(self, spec):
+        return self._inner.create_module(spec)
+
+    def exec_module(self, module):
+        self._inner.exec_module(module)
+        try:  # pragma: no cover - best effort, never break the jax import
+            from repro import _jax_compat
+
+            _jax_compat.install()
+        except Exception:
+            pass
+
+
+sys.meta_path.insert(0, _JaxCompatFinder())
+
+
+def _chain_next_sitecustomize():
+    """Python imports only the FIRST sitecustomize on sys.path — since this
+    one wins under PYTHONPATH=src, execute the next one (venv / coverage /
+    site-packages hooks) so environment startup customizations still run."""
+    import os
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    for entry in sys.path:
+        try:
+            base = os.path.abspath(entry or os.getcwd())
+            cand = os.path.join(base, "sitecustomize.py")
+            if base != here and os.path.isfile(cand):
+                import runpy
+
+                runpy.run_path(cand, run_name="sitecustomize_chained")
+                return
+        except Exception:  # pragma: no cover - never break startup
+            continue
+
+
+_chain_next_sitecustomize()

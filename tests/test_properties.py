@@ -1,7 +1,14 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Hypothesis property-based tests on system invariants.
+
+Requires the `hypothesis` dev dependency (requirements-dev.txt); skips
+cleanly (instead of erroring collection) when it is absent.
+"""
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import partition_metrics, rcb_order, rcb_parts, sfc_parts
