@@ -1,15 +1,23 @@
 """Paper Tables 1–2 analogue: Lanczos vs inverse iteration on a pebble-bed
-mesh, with and without RCB pre-partitioning.
+mesh, with and without RCB pre-partitioning — for BOTH RSB engines (the
+level-synchronous batched engine vs the recursive per-node reference).
 
 Validates:
   C2 — RCB pre-partitioning speeds up RSB (here: wall time on CPU AND the
        mechanism metric, gather-scatter locality — boundary/halo size),
   C4 — inverse iteration needs few outer iterations vs Lanczos restarts,
-  C1 — ≤1-element imbalance throughout.
+  C1 — ≤1-element imbalance throughout,
+  and the engine claim: batched ≥ recursive on wall clock at equal quality
+  (one compiled trace per run instead of one per tree node).
 
 Scaled to this container: the paper's 13M-element mesh on 4872–11340 ranks
 becomes a ~3–8k-element mesh on 8–32 parts; the OBSERVABLES (neighbor
 counts, iteration counts, relative speedups) are the comparable quantities.
+
+`smoke=True` is the CI regression config (see benchmarks/smoke_check.py):
+a small mesh, batched engine, both solver families — fast enough for every
+push, and its edge cut is gated against the checked-in
+BENCH_partition.json baseline.
 """
 
 from __future__ import annotations
@@ -24,36 +32,55 @@ from repro.dist.partition_aware import plan_halo_sharding
 from repro.mesh import dual_graph, pebble_mesh
 
 
-def run(dims=(14, 14, 14), nparts=16, full: bool = False) -> list:
+def run(
+    dims=(14, 14, 14),
+    nparts=16,
+    full: bool = False,
+    smoke: bool = False,
+    engines=("batched", "recursive"),
+    methods=("lanczos", "inverse"),
+) -> list:
     if full:
         dims, nparts = (24, 24, 24), 32
+    if smoke:
+        # Both solver families: inverse-iteration regressions (e.g. the
+        # fp32 Gram breakdown) are invisible to a lanczos-only gate.
+        dims, nparts = (10, 10, 10), 8
+        engines, methods = ("batched",), ("lanczos", "inverse")
     mesh = pebble_mesh(*dims, n_pebbles=6, seed=0)
     graph = dual_graph(mesh)
+    emit_prefix = "partition_time_smoke" if smoke else "partition_time"
     rows = []
-    for method in ("lanczos", "inverse"):
-        for pre in (None, "rcb"):
-            t0 = time.perf_counter()
-            parts, report = rsb_partition_mesh(
-                mesh, nparts, method=method, pre=pre, tol=1e-3,
-            )
-            dt = time.perf_counter() - t0
-            pm = partition_metrics(graph, parts, nparts, weights=mesh.weights)
-            halo = plan_halo_sharding(graph, parts, nparts).halo
-            rows.append({
-                "method": method, "pre": pre or "none",
-                "seconds": dt, "iters": report.total_iterations,
-                "max_nbrs": pm.max_neighbors, "avg_nbrs": pm.avg_neighbors,
-                "imbalance": pm.imbalance, "w_imb": pm.weighted_imbalance,
-                "volume": pm.total_volume,
-                "halo": halo,
-            })
-            emit(
-                f"partition_time/{method}/pre={pre or 'none'}",
-                dt * 1e6,
-                f"E={mesh.nelems};P={nparts};iters={report.total_iterations};"
-                f"max_nbrs={pm.max_neighbors};avg_nbrs={pm.avg_neighbors:.1f};"
-                f"w_imb={pm.weighted_imbalance:.3f};halo={halo}",
-            )
+    for engine in engines:
+        for method in methods:
+            for pre in (None, "rcb"):
+                t0 = time.perf_counter()
+                parts, report = rsb_partition_mesh(
+                    mesh, nparts, method=method, pre=pre, tol=1e-3,
+                    engine=engine,
+                )
+                dt = time.perf_counter() - t0
+                pm = partition_metrics(graph, parts, nparts, weights=mesh.weights)
+                halo = plan_halo_sharding(graph, parts, nparts).halo
+                rows.append({
+                    "engine": engine,
+                    "method": method, "pre": pre or "none",
+                    "seconds": dt, "iters": report.total_iterations,
+                    "levels": len(report.levels),
+                    "cut": pm.edge_cut,
+                    "max_nbrs": pm.max_neighbors, "avg_nbrs": pm.avg_neighbors,
+                    "imbalance": pm.imbalance, "w_imb": pm.weighted_imbalance,
+                    "volume": pm.total_volume,
+                    "halo": halo,
+                })
+                emit(
+                    f"{emit_prefix}/{engine}/{method}/pre={pre or 'none'}",
+                    dt * 1e6,
+                    f"E={mesh.nelems};P={nparts};iters={report.total_iterations};"
+                    f"cut={pm.edge_cut:.0f};max_nbrs={pm.max_neighbors};"
+                    f"avg_nbrs={pm.avg_neighbors:.1f};"
+                    f"w_imb={pm.weighted_imbalance:.3f};halo={halo}",
+                )
     return rows
 
 

@@ -25,10 +25,11 @@ def run(dims=(12, 12, 12), nparts=16, full: bool = False) -> list:
     graph = dual_graph(mesh)
     rows = []
 
-    def record(name, parts, dt):
+    def record(name, parts, dt, engine="-"):
         pm = partition_metrics(graph, parts, nparts)
         halo = plan_halo_sharding(graph, parts, nparts).halo
-        rows.append({"name": name, "seconds": dt, "cut": pm.edge_cut,
+        rows.append({"name": name, "engine": engine, "seconds": dt,
+                     "cut": pm.edge_cut,
                      "volume": pm.total_volume, "max_nbrs": pm.max_neighbors,
                      "avg_nbrs": pm.avg_neighbors, "halo": halo,
                      "imbalance": pm.imbalance})
@@ -38,10 +39,17 @@ def run(dims=(12, 12, 12), nparts=16, full: bool = False) -> list:
             f"max_nbrs={pm.max_neighbors};halo={halo};imb={pm.imbalance}",
         )
 
-    for lap in ("weighted", "unweighted"):
-        t0 = time.perf_counter()
-        parts, _ = rsb_partition_mesh(mesh, nparts, laplacian=lap, tol=1e-3)
-        record(f"rsb_{lap}", parts, time.perf_counter() - t0)
+    # RSB rows carry the engine comparison: the level-synchronous batched
+    # engine (default) vs the recursive per-node reference, same settings.
+    for engine in ("batched", "recursive"):
+        for lap in ("weighted", "unweighted"):
+            t0 = time.perf_counter()
+            parts, _ = rsb_partition_mesh(
+                mesh, nparts, laplacian=lap, tol=1e-3, engine=engine,
+            )
+            suffix = "" if engine == "batched" else "_recursive"
+            record(f"rsb_{lap}{suffix}", parts, time.perf_counter() - t0,
+                   engine=engine)
     for name in ("rcb", "rib", "sfc", "random"):
         t0 = time.perf_counter()
         parts = partition(mesh, nparts, partitioner=name)

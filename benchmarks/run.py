@@ -2,46 +2,91 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--json PATH]
 
 Tables ↔ paper:
-  partition_time  — Tables 1–2 (Lanczos vs inverse iteration, RCB pre-pass)
+  partition_time  — Tables 1–2 (Lanczos vs inverse iteration, RCB pre-pass,
+                    batched vs recursive RSB engine)
   weak_scaling    — Table 4 (cube meshes, E/P const, message-size regime)
-  quality         — §8 evaluation + §3 baselines (RSB/RCB/RIB/SFC/random)
+  quality         — §8 evaluation + §3 baselines (RSB/RCB/RIB/SFC/random),
+                    including rsb_* rows for both engines
   kernels         — Pallas kernel micro-benches
   roofline        — §Roofline table from cached dry-run artifacts
+
+``--json PATH`` writes the partition tables (plus an `engine_speedup`
+summary row — rsb_batched vs rsb_recursive wall clock — and the
+`partition_time_smoke` baseline the CI gate compares against) to PATH in
+the BENCH_partition.json layout.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
+
+
+def _engine_speedup(quality_rows, partition_rows) -> dict:
+    """rsb_batched vs rsb_recursive wall-clock, per suite."""
+    out: dict = {}
+    q_b = sum(r["seconds"] for r in quality_rows if r.get("engine") == "batched")
+    q_r = sum(r["seconds"] for r in quality_rows
+              if r.get("engine") == "recursive")
+    if q_b and q_r:
+        out["quality_rsb_batched_seconds"] = q_b
+        out["quality_rsb_recursive_seconds"] = q_r
+        out["quality_speedup"] = q_r / q_b
+    p_b = sum(r["seconds"] for r in partition_rows
+              if r.get("engine") == "batched")
+    p_r = sum(r["seconds"] for r in partition_rows
+              if r.get("engine") == "recursive")
+    if p_b and p_r:
+        out["partition_time_batched_seconds"] = p_b
+        out["partition_time_recursive_seconds"] = p_r
+        out["partition_time_speedup"] = p_r / p_b
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", default=None,
-                    choices=["partition_time", "weak_scaling", "quality",
-                             "kernels", "roofline"])
+                    choices=["partition", "partition_time", "weak_scaling",
+                             "quality", "kernels", "roofline"])
     ap.add_argument("--dryrun-dir", default="runs/dryrun")
+    ap.add_argument("--json", default=None,
+                    help="write partition tables to this BENCH json path")
     args = ap.parse_args()
+    if args.json and args.only not in (None, "partition"):
+        # The BENCH json is the CI gate's baseline; writing it from a run
+        # that skipped either partition suite would clobber it with empty
+        # tables and break benchmarks.smoke_check on the next push.
+        ap.error("--json requires both partition tables; drop --only or "
+                 "use --only partition")
 
     print("name,us_per_call,derived")
     t0 = time.time()
 
     def want(name):
+        if args.only == "partition":  # both tables the BENCH json records
+            return name in ("quality", "partition_time")
         return args.only is None or args.only == name
 
+    quality_rows: list = []
+    partition_rows: list = []
+    smoke_rows: list = []
     if want("quality"):
         from benchmarks import quality
 
-        quality.run(full=args.full)
+        quality_rows = quality.run(full=args.full)
     if want("partition_time"):
         from benchmarks import partition_time
 
-        partition_time.run(full=args.full)
+        partition_rows = partition_time.run(full=args.full)
+        if args.json:
+            smoke_rows = partition_time.run(smoke=True)
     if want("weak_scaling"):
         from benchmarks import weak_scaling
 
@@ -54,6 +99,26 @@ def main() -> None:
         from benchmarks import roofline_table
 
         roofline_table.run(args.dryrun_dir)
+
+    if args.json:
+        import jax
+
+        payload = {
+            "date": time.strftime("%Y-%m-%d"),
+            "host": {
+                "platform": platform.platform(),
+                "python": platform.python_version(),
+                "jax": jax.__version__,
+                "device": jax.devices()[0].platform,
+            },
+            "quality": quality_rows,
+            "partition_time": partition_rows,
+            "partition_time_smoke": smoke_rows,
+            "engine_speedup": _engine_speedup(quality_rows, partition_rows),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
     print(f"# benchmarks completed in {time.time() - t0:.1f}s", file=sys.stderr)
 
 

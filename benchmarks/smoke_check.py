@@ -1,0 +1,60 @@
+"""CI benchmark-smoke gate: run the partition_time smoke config and fail
+(exit 1) if the RSB edge cut regresses more than 10% against the
+checked-in BENCH_partition.json baseline.
+
+    PYTHONPATH=src python -m benchmarks.smoke_check [--baseline PATH]
+
+The smoke config (benchmarks/partition_time.py, smoke=True) is the batched
+engine, BOTH solver families (lanczos and inverse — inverse-iteration
+regressions would be invisible to a lanczos-only gate), pre ∈ {none, rcb}
+on a small pebble mesh — fast enough for every push.  Cut is the gated
+metric (quality regressions are the silent failure mode of solver
+refactors; wall clock is too noisy on shared CI runners).  Rows are
+matched on (engine, method, pre).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks import partition_time
+
+TOLERANCE = 1.10  # fail if cut > 110% of baseline
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_partition.json")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    base_rows = baseline.get("partition_time_smoke", [])
+    if not base_rows:
+        print(f"no partition_time_smoke baseline in {args.baseline}",
+              file=sys.stderr)
+        return 1
+
+    rows = partition_time.run(smoke=True)
+    by_key = {(r["engine"], r["method"], r["pre"]): r for r in rows}
+    failed = False
+    for base in base_rows:
+        key = (base["engine"], base["method"], base["pre"])
+        row = by_key.get(key)
+        if row is None:
+            print(f"MISSING smoke row {key}", file=sys.stderr)
+            failed = True
+            continue
+        ratio = row["cut"] / base["cut"]
+        status = "OK" if ratio <= TOLERANCE else "REGRESSION"
+        print(f"{status} {key}: cut {row['cut']:.0f} vs baseline "
+              f"{base['cut']:.0f} ({ratio:.3f}x)", file=sys.stderr)
+        if ratio > TOLERANCE:
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

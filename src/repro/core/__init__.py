@@ -15,18 +15,25 @@ from repro.core.laplacian import (
     dense_laplacian_np,
     fiedler_oracle_np,
 )
-from repro.core.lanczos import lanczos_fiedler, LanczosInfo
+from repro.core.lanczos import (lanczos_fiedler, lanczos_fiedler_batched,
+                                LanczosInfo, BatchedLanczosInfo)
 from repro.core.flexcg import flexcg, CGResult
-from repro.core.inverse_iteration import inverse_iteration, InverseIterInfo
+from repro.core.inverse_iteration import (inverse_iteration,
+                                          inverse_iteration_batched,
+                                          InverseIterInfo,
+                                          BatchedInverseIterInfo)
 from repro.core.amg import AMG, amg_setup, coarsen_graph
 from repro.core.rcb import rcb_order, rib_order, rcb_parts, rib_parts
 from repro.core.sfc import sfc_parts, sfc_order, hilbert_index, morton_index
 from repro.core.fiedler import (fiedler_from_graph, fiedler_from_mesh, FiedlerResult,
+                                fiedler_from_graph_batched, fiedler_from_mesh_batched,
                                 fiedler_pair_from_graph, best_cut_in_pair)
 from repro.core.rsb import (
     rsb_partition_mesh,
     rsb_partition_graph,
     partition,
     RSBReport,
+    LevelRecord,
+    BisectionRecord,
 )
 from repro.core.metrics import partition_metrics, PartitionMetrics, comm_time_model, m2_words

@@ -7,7 +7,13 @@ Adds the practical glue the RSB driver needs:
     cancellation makes `L` act as 0 on them),
   * a dense NumPy path for tiny subproblems (recursion tail),
   * optional geometric warm start (beyond-paper: seed with the coordinate
-    along the dominant axis instead of noise — see EXPERIMENTS.md §Perf).
+    along the dominant axis instead of noise — see EXPERIMENTS.md §Perf),
+  * **batched entry points** (`fiedler_from_graph_batched`,
+    `fiedler_from_mesh_batched`): solve a whole RSB tree level at once.
+    Subproblems are grouped into (n_pad, width_pad) **shape buckets**
+    (power-of-two padded, batch padded to a power of two with fully-masked
+    dummy rows), each bucket runs one vmapped solve whose compiled trace is
+    shared by every bucket of the same shape for the life of the process.
 """
 
 from __future__ import annotations
@@ -19,10 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.amg import amg_setup
-from repro.core.gather_scatter import GSLaplacian, gs_setup, _build
-from repro.core.inverse_iteration import inverse_iteration
+from repro.core.gather_scatter import GSHandle, GSLaplacian, gs_setup, _build
+from repro.core.inverse_iteration import inverse_iteration, inverse_iteration_batched
 from repro.core.laplacian import EllLaplacian, dense_laplacian_np, ell_laplacian
-from repro.core.lanczos import lanczos_fiedler
+from repro.core.lanczos import lanczos_fiedler, lanczos_fiedler_batched
 from repro.mesh.graphs import Graph, csr_to_ell
 
 _DENSE_CUTOFF = 192
@@ -41,38 +47,81 @@ class FiedlerResult:
     method: str
 
 
-def _padded_gs_laplacian(vert_gid: np.ndarray, n_pad: int) -> GSLaplacian:
-    """Gather-scatter Laplacian padded to n_pad elements (decoupled tail)."""
+def _fill_ell_block(graph: Graph, C: np.ndarray, V: np.ndarray, D: np.ndarray,
+                    col_offset: int = 0) -> None:
+    """Fill one graph's rows of a padded ELL block (C/V/D are views of the
+    target rows; rows past graph.n keep self-columns and zero vals/diag,
+    so L acts as 0 on them).  The single home of the padding invariants —
+    the padded, batched, and packed builders all delegate here."""
+    cols, vals = csr_to_ell(graph, max_row=None)
+    nb, wb = cols.shape
+    if wb > C.shape[1]:
+        raise ValueError("width_pad below max degree")
+    C[:nb, :wb] = cols + col_offset
+    V[:nb, :wb] = vals
+    np.add.at(D[:nb], graph.rows, graph.weights)
+
+
+def _noise_b0(seed: int, n: int) -> np.ndarray:
+    """Deterministic start-vector noise, generated on the host: identical
+    between the unbatched and batched entry points (batch-of-one parity)
+    and free of the threefry compile a first `jax.random.normal` costs."""
+    return np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+
+
+def _gs_laplacian_from_np(gid: np.ndarray, n_global: int, n: int) -> GSLaplacian:
+    """GSLaplacian with host-computed degrees (aw_apply(1) ≡ per-slot sum of
+    gid multiplicities) — avoids `_build`'s eager JAX dispatch on the hot
+    setup path.  gid: (n, K) or (B, n, K); per-problem id spaces for 3-D."""
+    K = gid.shape[-1]
+    if gid.ndim == 3:
+        deg_full = np.stack([
+            np.bincount(g.ravel(), minlength=n_global)[g].sum(-1) for g in gid
+        ])
+    else:
+        deg_full = np.bincount(gid.ravel(), minlength=n_global)[gid].sum(-1)
+    h = GSHandle(gid=jnp.asarray(gid.astype(np.int32)), n_global=n_global)
+    return GSLaplacian(
+        terms=((1.0, h),), n=n,
+        degree_full=jnp.asarray(deg_full.astype(np.float32)),
+        diag=jnp.asarray((deg_full - K).astype(np.float32)),
+    )
+
+
+def _fill_gs_block(vert_gid: np.ndarray, gid_block: np.ndarray,
+                   base: int) -> int:
+    """Compact one sub-mesh's gids into gid_block starting at id `base`;
+    rows past E get one fresh singleton id per slot (no coupling,
+    self-cancelling).  Returns the next unused id."""
     E, K = vert_gid.shape
     uniq, inv = np.unique(vert_gid, return_inverse=True)
-    ng = uniq.size
-    gid = np.empty((n_pad, K), dtype=np.int64)
-    gid[:E] = inv.reshape(E, K)
-    if n_pad > E:
-        # one fresh dummy id per padded slot — no coupling, self-cancelling
-        gid[E:] = (ng + np.arange((n_pad - E) * K)).reshape(n_pad - E, K)
-    handle_gid = jnp.asarray(gid.astype(np.int32))
-    from repro.core.gather_scatter import GSHandle
+    gid_block[:E] = inv.reshape(E, K) + base
+    base += uniq.size
+    n_rows = gid_block.shape[0]
+    if n_rows > E:
+        pad = (n_rows - E) * K
+        gid_block[E:] = (base + np.arange(pad)).reshape(-1, K)
+        base += pad
+    return base
 
-    h = GSHandle(gid=handle_gid, n_global=int(gid.max()) + 1)
+
+def _padded_gs_laplacian(vert_gid: np.ndarray, n_pad: int) -> GSLaplacian:
+    """Gather-scatter Laplacian padded to n_pad elements (decoupled tail)."""
+    gid = np.empty((n_pad, vert_gid.shape[1]), dtype=np.int64)
+    ng = _fill_gs_block(vert_gid, gid, 0)
+    h = GSHandle(gid=jnp.asarray(gid.astype(np.int32)), n_global=ng)
     return _build([(1.0, h)], n_pad)
 
 
 def _padded_ell_laplacian(graph: Graph, n_pad: int, width_pad: int) -> EllLaplacian:
-    cols, vals = csr_to_ell(graph, max_row=None)
-    n, w = cols.shape
-    if width_pad < w:
-        raise ValueError("width_pad below max degree")
     C = np.tile(np.arange(n_pad, dtype=np.int64)[:, None], (1, width_pad))
     V = np.zeros((n_pad, width_pad), dtype=np.float64)
-    C[:n, :w] = cols
-    V[:n, :w] = vals
-    deg = np.zeros(n_pad, dtype=np.float64)
-    np.add.at(deg, graph.rows, graph.weights)
+    D = np.zeros(n_pad, dtype=np.float64)
+    _fill_ell_block(graph, C, V, D)
     return EllLaplacian(
         cols=jnp.asarray(C.astype(np.int32)),
         vals=jnp.asarray(V.astype(np.float32)),
-        diag=jnp.asarray(deg.astype(np.float32)),
+        diag=jnp.asarray(D.astype(np.float32)),
         n=n_pad,
     )
 
@@ -108,9 +157,10 @@ def fiedler_from_graph(
     if use_kernel:
         op = dataclasses.replace(op, use_kernel=True)
     mask = jnp.asarray((np.arange(n_pad) < n).astype(np.float32))
-    b0 = None
     if warm is not None:
         b0 = jnp.asarray(np.pad(warm.astype(np.float32), (0, n_pad - n)))
+    else:
+        b0 = jnp.asarray(_noise_b0(seed, n_pad))
 
     if method == "lanczos":
         y, info = lanczos_fiedler(
@@ -167,9 +217,10 @@ def fiedler_from_mesh(
     n_pad = next_pow2(E) if pad else E
     op = _padded_gs_laplacian(vert_gid, n_pad)
     mask = jnp.asarray((np.arange(n_pad) < E).astype(np.float32))
-    b0 = None
     if warm is not None:
         b0 = jnp.asarray(np.pad(warm.astype(np.float32), (0, n_pad - E)))
+    else:
+        b0 = jnp.asarray(_noise_b0(seed, n_pad))
 
     if method == "lanczos":
         y, info = lanczos_fiedler(
@@ -194,6 +245,339 @@ def fiedler_from_mesh(
     else:
         raise ValueError(f"unknown fiedler method: {method}")
     return FiedlerResult(np.asarray(y[:E]), lam, res, iters, method)
+
+
+# ---------------------------------------------------------------------------
+# Batched (level-synchronous) entry points
+# ---------------------------------------------------------------------------
+
+def _padded_ell_laplacian_batched(
+    graphs: list, n_pad: int, width_pad: int, b_pad: int
+) -> EllLaplacian:
+    """Stack B assembled Laplacians into one (b_pad, n_pad, width_pad) ELL
+    operator.  Rows past each graph's n — and whole batch-padding rows —
+    have zero vals and zero diag, so L acts as 0 on them."""
+    C = np.tile(
+        np.arange(n_pad, dtype=np.int64)[None, :, None], (b_pad, 1, width_pad)
+    )
+    V = np.zeros((b_pad, n_pad, width_pad), dtype=np.float64)
+    D = np.zeros((b_pad, n_pad), dtype=np.float64)
+    for b, g in enumerate(graphs):
+        _fill_ell_block(g, C[b], V[b], D[b])
+    return EllLaplacian(
+        cols=jnp.asarray(C.astype(np.int32)),
+        vals=jnp.asarray(V.astype(np.float32)),
+        diag=jnp.asarray(D.astype(np.float32)),
+        n=n_pad,
+    )
+
+
+def _padded_gs_laplacian_batched(
+    vert_gids: list, n_pad: int, b_pad: int
+) -> GSLaplacian:
+    """Stack B gather-scatter Laplacians into one (b_pad, n_pad, K) handle.
+
+    Each subproblem's gids are compacted independently (per-problem id
+    space); padded element slots get fresh singleton ids (decoupled,
+    self-cancelling).  `n_global` is a shared power-of-two upper bound so
+    every same-shape bucket reuses one compiled trace."""
+    K = vert_gids[0].shape[1]
+    gid = np.empty((b_pad, n_pad, K), dtype=np.int64)
+    need = 2
+    for b, vg in enumerate(vert_gids):
+        need = max(need, _fill_gs_block(vg, gid[b], 0))
+    ng = next_pow2(need)
+    for b in range(len(vert_gids), b_pad):  # batch-padding dummy problems
+        gid[b] = (np.arange(n_pad * K, dtype=np.int64) % ng).reshape(n_pad, K)
+    return _gs_laplacian_from_np(gid, ng, n_pad)
+
+
+def _batched_b0(sizes, seeds, warms, n_pad: int, b_pad: int) -> jax.Array:
+    """Per-problem start vectors: padded warm starts where given, otherwise
+    seeded noise; zero rows for batch-padding dummies."""
+    rows = []
+    for sz, sd, warm in zip(sizes, seeds, warms):
+        if warm is not None:
+            w = np.asarray(warm, dtype=np.float32)
+            rows.append(np.pad(w, (0, n_pad - sz)))
+        else:
+            rows.append(_noise_b0(sd, n_pad))
+    for _ in range(b_pad - len(rows)):
+        rows.append(np.zeros(n_pad, dtype=np.float32))
+    return jnp.asarray(np.stack(rows))
+
+
+def _normalize_batch_args(B, seeds, warms):
+    seeds = list(range(B)) if seeds is None else list(seeds)
+    warms = [None] * B if warms is None else list(warms)
+    if len(seeds) != B or len(warms) != B:
+        raise ValueError("seeds/warms must match the batch length")
+    return seeds, warms
+
+
+# -- packed layout (one flat vector; the Lanczos single-trace fast path) ----
+
+def _pack_layout(sizes, pack_slots=None, pack_segs=None):
+    """Pack B subproblems into one flat vector of power-of-two blocks.
+
+    Returns (offs, N, n_seg, seg, mask): problem b owns slots
+    [offs[b], offs[b+1]) with its first sizes[b] slots real (mask 1).
+    `pack_slots`/`pack_segs` pin N / n_seg to run-wide values so every tree
+    level of an RSB run solves in ONE compiled trace (a level's subproblems
+    partition the root set, so their padded blocks always fit the root's
+    padded size); they are only overridden upward if a layout overflows.
+    """
+    pads = [next_pow2(max(s, 2)) for s in sizes]
+    offs = np.concatenate([[0], np.cumsum(pads)]).astype(np.int64)
+    total = int(offs[-1])
+    N = next_pow2(total)
+    if pack_slots is not None:
+        N = max(N, int(pack_slots))
+    n_seg = next_pow2(len(sizes))
+    if pack_segs is not None:
+        n_seg = max(n_seg, int(pack_segs))
+    seg = np.zeros(N, dtype=np.int32)
+    mask = np.zeros(N, dtype=np.float32)
+    for b, s in enumerate(sizes):
+        seg[offs[b]:offs[b + 1]] = b
+        mask[offs[b]:offs[b] + s] = 1.0
+    # trailing slots: seg 0, mask 0, zero operator rows — fully inert
+    return offs, N, n_seg, seg, mask
+
+
+def _packed_ell_laplacian(graphs: list, offs, N: int, width_pad: int) -> EllLaplacian:
+    """Block-diagonal ELL Laplacian over the packed slots (plain unbatched
+    `EllLaplacian` of size N — each problem's cols are offset into its own
+    block, so there is no cross-problem coupling)."""
+    C = np.tile(np.arange(N, dtype=np.int64)[:, None], (1, width_pad))
+    V = np.zeros((N, width_pad), dtype=np.float64)
+    D = np.zeros(N, dtype=np.float64)
+    for b, g in enumerate(graphs):
+        o, o_next = int(offs[b]), int(offs[b + 1])
+        _fill_ell_block(g, C[o:o_next], V[o:o_next], D[o:o_next], col_offset=o)
+    return EllLaplacian(
+        cols=jnp.asarray(C.astype(np.int32)),
+        vals=jnp.asarray(V.astype(np.float32)),
+        diag=jnp.asarray(D.astype(np.float32)),
+        n=N,
+    )
+
+
+def _packed_gs_laplacian(vert_gids: list, offs, N: int) -> GSLaplacian:
+    """Block-diagonal gather-scatter Laplacian over the packed slots: each
+    problem's compacted gids live in a disjoint range of one shared id
+    space; padding slots get fresh singleton ids (self-cancelling).
+    `n_global` is the shape-stable bound next_pow2(N·K)."""
+    K = vert_gids[0].shape[1]
+    gid = np.empty((N, K), dtype=np.int64)
+    base = 0
+    for b, vg in enumerate(vert_gids):
+        o, o_next = int(offs[b]), int(offs[b + 1])
+        base = _fill_gs_block(vg, gid[o:o_next], base)
+    tail = int(offs[-1])
+    if N > tail:
+        gid[tail:] = (base + np.arange((N - tail) * K)).reshape(-1, K)
+    return _gs_laplacian_from_np(gid, next_pow2(N * K), N)
+
+
+def _packed_b0(sizes, offs, N: int, seeds, warms) -> jax.Array:
+    out = np.zeros(N, dtype=np.float32)
+    for b, s in enumerate(sizes):
+        o, o_next = int(offs[b]), int(offs[b + 1])
+        if warms[b] is not None:
+            out[o:o + s] = np.asarray(warms[b], dtype=np.float32)
+        else:
+            out[o:o_next] = _noise_b0(seeds[b], o_next - o)
+    return jnp.asarray(out)
+
+
+def _solve_inverse_buckets(results, solve_ix, size_of, bucket_key, build_op,
+                           seeds, warms, tol):
+    """Shared method="inverse" tail for both batched entry points: group
+    problems into shape buckets, run the leading-batch-dim Jacobi solve per
+    bucket, unpack FiedlerResults in place."""
+    buckets: dict = {}
+    for i in solve_ix:
+        buckets.setdefault(bucket_key(i), []).append(i)
+    for key, ix in sorted(buckets.items()):
+        n_pad = key[0]
+        b_pad = next_pow2(len(ix))
+        op = build_op(ix, key, b_pad)
+        mask = np.zeros((b_pad, n_pad), dtype=np.float32)
+        for r, i in enumerate(ix):
+            mask[r, : size_of(i)] = 1.0
+        b0 = _batched_b0(
+            [size_of(i) for i in ix], [seeds[i] for i in ix],
+            [warms[i] for i in ix], n_pad, b_pad,
+        )
+        Y, info = inverse_iteration_batched(
+            op, n_pad, mask=jnp.asarray(mask), b0=b0, tol=tol
+        )
+        Yh = np.asarray(Y)
+        for r, i in enumerate(ix):
+            results[i] = FiedlerResult(
+                Yh[r, : size_of(i)], float(info.eigenvalue[r]),
+                float(info.residual[r]), int(info.outer_iters[r]), "inverse",
+            )
+
+
+def _solve_packed_lanczos(op, offs, N, n_seg, seg, mask, b0, sizes,
+                          tol, window, max_restarts):
+    Y, info = lanczos_fiedler_batched(
+        op, N, seg=jnp.asarray(seg), n_seg=n_seg, mask=jnp.asarray(mask),
+        b0=b0, window=window, max_restarts=max_restarts, tol=tol,
+    )
+    Yh = np.asarray(Y)
+    return [
+        FiedlerResult(
+            Yh[int(offs[b]):int(offs[b]) + s], float(info.eigenvalue[b]),
+            float(info.residual[b]), int(info.restarts[b]), "lanczos",
+        )
+        for b, s in enumerate(sizes)
+    ]
+
+
+def fiedler_from_graph_batched(
+    graphs: list,
+    *,
+    method: str = "lanczos",
+    seeds: list | None = None,
+    warms: list | None = None,
+    tol: float = 1e-3,
+    window: int = 30,
+    max_restarts: int = 50,
+    pack_slots: int | None = None,
+    pack_segs: int | None = None,
+    width_pad: int | None = None,
+    use_kernel: bool = False,
+) -> list:
+    """Fiedler vectors of B independent graphs in one batched solve.
+
+    Returns FiedlerResults aligned with the input order; problems at or
+    below the dense cutoff take the same dense path as the unbatched entry
+    point (exact parity on a batch of one).
+
+    method="lanczos" packs all subproblems into one flat block-diagonal
+    solve whose trace is keyed by (pack_slots, pack_segs, width_pad,
+    window) — the RSB engine pins those to run-wide values so one trace
+    serves the whole run.  The packed operator is an ordinary 2-D ELL, so
+    `use_kernel=True` routes its matvec through the Pallas `ell_spmv`
+    kernel just like the unbatched path.  method="inverse" runs
+    Jacobi-preconditioned batched flexcg over leading-batch-dim operators
+    bucketed by (n_pad, width_pad); the AMG hierarchy is per-graph host
+    state and stays on the unbatched path (use_kernel does not apply to
+    the 3-D batched operators).
+    """
+    B = len(graphs)
+    seeds, warms = _normalize_batch_args(B, seeds, warms)
+    results: list = [None] * B
+    solve_ix = []
+    for i, g in enumerate(graphs):
+        if g.n <= _DENSE_CUTOFF:
+            vec, lam = _dense_fiedler(dense_laplacian_np(g))
+            results[i] = FiedlerResult(vec, lam, 0.0, 0, "dense")
+        else:
+            solve_ix.append(i)
+    if not solve_ix:
+        return results
+
+    if method == "lanczos":
+        sizes = [graphs[i].n for i in solve_ix]
+        offs, N, n_seg, seg, mask = _pack_layout(sizes, pack_slots, pack_segs)
+        width = max(
+            int(graphs[i].degrees.max()) if graphs[i].nnz else 1
+            for i in solve_ix
+        )
+        width = next_pow2(max(width, 2))
+        if width_pad is not None:
+            width = max(width, int(width_pad))
+        op = _packed_ell_laplacian([graphs[i] for i in solve_ix], offs, N, width)
+        if use_kernel:
+            op = dataclasses.replace(op, use_kernel=True)
+        b0 = _packed_b0(sizes, offs, N, [seeds[i] for i in solve_ix],
+                        [warms[i] for i in solve_ix])
+        packed = _solve_packed_lanczos(
+            op, offs, N, n_seg, seg, mask, b0, sizes, tol, window, max_restarts
+        )
+        for r, i in enumerate(solve_ix):
+            results[i] = packed[r]
+        return results
+
+    if method != "inverse":
+        raise ValueError(f"unknown fiedler method: {method}")
+
+    def bucket_key(i):
+        g = graphs[i]
+        width = int(g.degrees.max()) if g.nnz else 1
+        return (next_pow2(g.n), next_pow2(max(width, 2)))
+
+    _solve_inverse_buckets(
+        results, solve_ix, lambda i: graphs[i].n, bucket_key,
+        lambda ix, key, b_pad: _padded_ell_laplacian_batched(
+            [graphs[i] for i in ix], key[0], key[1], b_pad
+        ),
+        seeds, warms, tol,
+    )
+    return results
+
+
+def fiedler_from_mesh_batched(
+    vert_gids: list,
+    *,
+    method: str = "lanczos",
+    seeds: list | None = None,
+    warms: list | None = None,
+    tol: float = 1e-3,
+    window: int = 30,
+    max_restarts: int = 50,
+    pack_slots: int | None = None,
+    pack_segs: int | None = None,
+) -> list:
+    """Matrix-free batched analogue of :func:`fiedler_from_mesh`: B element
+    sub-meshes (their (E, K) global-id tables) per call.  method="lanczos"
+    packs every sub-mesh into one flat gather-scatter solve (one trace per
+    run when pack_slots/pack_segs are pinned); method="inverse" uses the
+    leading-batch-dim Jacobi path (AMG is per-graph host state)."""
+    B = len(vert_gids)
+    seeds, warms = _normalize_batch_args(B, seeds, warms)
+    results: list = [None] * B
+    solve_ix = []
+    for i, vg in enumerate(vert_gids):
+        if vg.shape[0] <= _DENSE_CUTOFF:
+            from repro.mesh.graphs import dual_graph_from_incidence
+
+            g = dual_graph_from_incidence(vg, int(vg.max()) + 1, vg.shape[0])
+            vec, lam = _dense_fiedler(dense_laplacian_np(g))
+            results[i] = FiedlerResult(vec, lam, 0.0, 0, "dense")
+        else:
+            solve_ix.append(i)
+    if not solve_ix:
+        return results
+
+    if method == "lanczos":
+        sizes = [vert_gids[i].shape[0] for i in solve_ix]
+        offs, N, n_seg, seg, mask = _pack_layout(sizes, pack_slots, pack_segs)
+        op = _packed_gs_laplacian([vert_gids[i] for i in solve_ix], offs, N)
+        b0 = _packed_b0(sizes, offs, N, [seeds[i] for i in solve_ix],
+                        [warms[i] for i in solve_ix])
+        packed = _solve_packed_lanczos(
+            op, offs, N, n_seg, seg, mask, b0, sizes, tol, window, max_restarts
+        )
+        for r, i in enumerate(solve_ix):
+            results[i] = packed[r]
+        return results
+
+    if method != "inverse":
+        raise ValueError(f"unknown fiedler method: {method}")
+    _solve_inverse_buckets(
+        results, solve_ix, lambda i: vert_gids[i].shape[0],
+        lambda i: (next_pow2(vert_gids[i].shape[0]),),
+        lambda ix, key, b_pad: _padded_gs_laplacian_batched(
+            [vert_gids[i] for i in ix], key[0], b_pad
+        ),
+        seeds, warms, tol,
+    )
+    return results
 
 
 # ---------------------------------------------------------------------------

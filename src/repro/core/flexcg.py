@@ -14,6 +14,15 @@ faithfully:
 
 All dots are masked so padded (bucketed) entries never contribute; every
 residual/preconditioned vector is re-projected against the constants.
+
+The solver is **batched**: `b` may carry arbitrary leading batch dims
+(the vector axis is always the last one).  Every reduction is per-problem
+(`axis=-1, keepdims=True`), convergence is tracked per problem, and a
+converged problem's state is frozen (`jnp.where` on the active flag) while
+the while_loop keeps running until *all* problems are done — the
+"masked batched iterations that stop per-element" the level-synchronous
+RSB engine relies on.  For a 1-D `b` the behaviour (and the scalar
+`iters`/`resnorm` in the result) is unchanged.
 """
 
 from __future__ import annotations
@@ -25,9 +34,17 @@ import jax
 import jax.numpy as jnp
 
 
+def _vdot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Per-problem dot product: reduce the vector (last) axis, keepdims."""
+    return jnp.sum(a * b, axis=-1, keepdims=True)
+
+
 def _project_out_ones(x: jax.Array, mask: jax.Array) -> jax.Array:
-    """Remove the (masked) constant component: x ← x − mean_mask(x)."""
-    m = jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    """Remove the (masked) constant component: x ← x − mean_mask(x).
+
+    Batched over any leading dims (the reduction is per problem).
+    """
+    m = _vdot(x, mask) / jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1.0)
     return (x - m) * mask
 
 
@@ -35,8 +52,8 @@ def _project_out_ones(x: jax.Array, mask: jax.Array) -> jax.Array:
 @dataclasses.dataclass
 class CGResult:
     x: jax.Array
-    iters: jax.Array
-    resnorm: jax.Array
+    iters: jax.Array    # per-problem iteration counts (scalar for 1-D input)
+    resnorm: jax.Array  # per-problem final residual norms
 
 
 def flexcg(
@@ -49,42 +66,66 @@ def flexcg(
     tol: float = 1e-5,
     maxiter: int = 200,
 ) -> CGResult:
-    """Jittable flexible-PCG.  `op`/`precond` must be jit-traceable."""
-    n = b.shape[0]
-    mask = jnp.ones((n,), b.dtype) if mask is None else mask.astype(b.dtype)
+    """Jittable flexible-PCG.  `op`/`precond` must be jit-traceable.
+
+    `b`: (..., n).  `op`/`precond` map (..., n) → (..., n).  `mask` is
+    broadcast against `b`; each leading index is an independent problem
+    whose iteration stops (state freezes) at its own convergence.
+    """
+    mask = jnp.ones_like(b) if mask is None else jnp.broadcast_to(
+        mask.astype(b.dtype), b.shape
+    )
     M = (lambda r: r) if precond is None else precond
 
     b = _project_out_ones(b, mask)
-    bnorm = jnp.sqrt(jnp.sum(b * b))
+    bnorm = jnp.sqrt(_vdot(b, b))
     x = jnp.zeros_like(b) if x0 is None else _project_out_ones(x0, mask)
     r = _project_out_ones(b - op(x), mask)
     # Key point: first direction is the *unpreconditioned* residual.
     z = r
     p = z
-    rz = jnp.sum(r * z)
-    resnorm = jnp.sqrt(jnp.sum(r * r))
+    rz = _vdot(r, z)
+    resnorm = jnp.sqrt(_vdot(r, r))
     tol_abs = tol * jnp.maximum(bnorm, 1e-30)
+    k = jnp.zeros(b.shape[:-1] + (1,), jnp.int32)
+
+    def active_flags(k, resnorm):
+        return jnp.logical_and(k < maxiter, resnorm > tol_abs)
 
     def cond(state):
         x, r, z, p, rz, k, resnorm = state
-        return jnp.logical_and(k < maxiter, resnorm > tol_abs)
+        return jnp.any(active_flags(k, resnorm))
 
     def body(state):
-        x, r, z, p, rz, k, _ = state
+        x, r, z, p, rz, k, resnorm = state
+        act = active_flags(k, resnorm)          # (..., 1) bool per problem
         w = op(p)
-        pw = jnp.sum(p * w)
+        pw = _vdot(p, w)
         alpha = jnp.where(jnp.abs(pw) > 1e-30, rz / pw, 0.0)
         x_new = x + alpha * p
         r_new = _project_out_ones(r - alpha * w, mask)
         z_new = _project_out_ones(M(r_new), mask)
         beta = jnp.where(
-            jnp.abs(rz) > 1e-30, jnp.sum(z_new * (r_new - r)) / rz, 0.0
+            jnp.abs(rz) > 1e-30, _vdot(z_new, r_new - r) / rz, 0.0
         )
-        rz_new = jnp.sum(r_new * z_new)
+        rz_new = _vdot(r_new, z_new)
         p_new = z_new + beta * p
-        resnorm = jnp.sqrt(jnp.sum(r_new * r_new))
-        return (x_new, r_new, z_new, p_new, rz_new, k + 1, resnorm)
+        res_new = jnp.sqrt(_vdot(r_new, r_new))
+        # Converged problems keep their state frozen.
+        return (
+            jnp.where(act, x_new, x),
+            jnp.where(act, r_new, r),
+            jnp.where(act, z_new, z),
+            jnp.where(act, p_new, p),
+            jnp.where(act, rz_new, rz),
+            k + act.astype(jnp.int32),
+            jnp.where(act, res_new, resnorm),
+        )
 
-    state = (x, r, z, p, rz, jnp.zeros((), jnp.int32), resnorm)
+    state = (x, r, z, p, rz, k, resnorm)
     x, r, z, p, rz, k, resnorm = jax.lax.while_loop(cond, body, state)
-    return CGResult(x=_project_out_ones(x, mask), iters=k, resnorm=resnorm)
+    return CGResult(
+        x=_project_out_ones(x, mask),
+        iters=jnp.squeeze(k, axis=-1),
+        resnorm=jnp.squeeze(resnorm, axis=-1),
+    )

@@ -50,7 +50,10 @@ class GSHandle:
     Attributes
     ----------
     gid : (E, K) int32 jnp array — compacted global item ids per element.
-    n_global : number of distinct global ids.
+          A (B, E, K) table holds B **independent** gather-scatter problems
+          (each with its own id space) — the batched-RSB layout.
+    n_global : number of distinct global ids (shared upper bound for a
+          batched table; ids only need to be < n_global per problem).
     """
 
     gid: jax.Array
@@ -58,6 +61,11 @@ class GSHandle:
 
     def __hash__(self):  # usable as a static arg / closure capture
         return id(self)
+
+
+jax.tree_util.register_dataclass(
+    GSHandle, data_fields=("gid",), meta_fields=("n_global",)
+)
 
 
 def gs_setup(gid_table: np.ndarray) -> GSHandle:
@@ -75,7 +83,18 @@ def gs_apply(handle: GSHandle, u_local: jax.Array) -> jax.Array:
     """`Q Qᵀ` — sum equal-gid entries, copy sums back.  (gslib `gs_op`.)
 
     u_local: (..., E, K) values on local vertices.  Batched over leading dims.
+    A (B, E, K) handle table pairs problem b's gids with u_local[b] (each
+    problem has its own independent id space).
     """
+    if handle.gid.ndim == 3:
+        def one_b(g, u):
+            summed = jax.ops.segment_sum(
+                u.reshape(-1), g.reshape(-1), num_segments=handle.n_global
+            )
+            return jnp.take(summed, g.reshape(-1)).reshape(u.shape)
+
+        return jax.vmap(one_b)(handle.gid, u_local)
+
     flat_gid = handle.gid.reshape(-1)
 
     def one(u):
@@ -94,7 +113,7 @@ def aw_apply(handle: GSHandle, x: jax.Array) -> jax.Array:
 
     x: (..., E).  P broadcasts x_e to the element's K vertices; Pᵀ sums back.
     """
-    k = handle.gid.shape[1]
+    k = handle.gid.shape[-1]
     u_local = jnp.broadcast_to(x[..., None], x.shape + (k,))
     return gs_apply(handle, u_local).sum(axis=-1)
 
@@ -106,11 +125,18 @@ class GSLaplacian:
     `handles` is a list of (sign, GSHandle) terms:
       weighted   : [(+1, vertex_gs)]
       unweighted : [(+1, vertex_gs), (−1, edge_gs), (+1, face_gs)]
+
+    Batched: handles with (B, E, K) gid tables yield an operator mapping
+    (B, E) → (B, E) — B independent Laplacians in one apply.
+
+    Registered as a pytree (terms/degree_full/diag are leaves, n static)
+    so batched solves can pass the operator as a traced jit argument and
+    share one compiled trace per shape bucket.
     """
 
     terms: tuple
     n: int
-    degree_full: jax.Array   # Σ_j A[e, j]  (row sums incl. self terms)
+    degree_full: jax.Array   # (..., E) Σ_j A[e, j]  (row sums incl. self terms)
     diag: jax.Array          # true Laplacian diagonal Σ_{j≠e} ω_ej
 
     def __hash__(self):
@@ -131,17 +157,26 @@ class GSLaplacian:
 
 
 def _build(terms, n) -> GSLaplacian:
-    ones = jnp.ones((n,), dtype=jnp.float32)
-    deg_full = jnp.zeros((n,), dtype=jnp.float32)
-    self_count = jnp.zeros((n,), dtype=jnp.float32)
+    # leading dims of the gid tables (e.g. a batch axis) carry through
+    shape = terms[0][1].gid.shape[:-1]
+    ones = jnp.ones(shape, dtype=jnp.float32)
+    deg_full = jnp.zeros(shape, dtype=jnp.float32)
+    self_count = jnp.zeros(shape, dtype=jnp.float32)
     for sign, h in terms:
         deg_full = deg_full + sign * aw_apply(h, ones)
         # self contribution of element e through table h = K (ids distinct
         # within an element for well-formed hexes)
-        self_count = self_count + sign * h.gid.shape[1]
+        self_count = self_count + sign * h.gid.shape[-1]
     return GSLaplacian(
         terms=tuple(terms), n=n, degree_full=deg_full, diag=deg_full - self_count
     )
+
+
+jax.tree_util.register_dataclass(
+    GSLaplacian,
+    data_fields=("terms", "degree_full", "diag"),
+    meta_fields=("n",),
+)
 
 
 def weighted_laplacian(vert_gid: np.ndarray) -> GSLaplacian:

@@ -14,11 +14,21 @@ AMG-preconditioned flexcg, set b ← y.  Two parRSB augmentations reproduced:
 
 The outer loop is a host loop (a handful of iterations, paper reports ~6);
 each inner solve is a single jitted while_loop.
+
+**Batched variant** (`inverse_iteration_batched`): B subproblems (one RSB
+tree level) share a single jitted, per-element-masked flexcg inner solve.
+The AMG hierarchy is inherently per-graph (host-built, ragged), so the
+batched path uses the Jacobi preconditioner taken from the operator's own
+`diag` — the paper's smoother — applied per subproblem.  Both of the
+paper's outer-loop refinements survive batching: the augmented Krylov
+projection becomes a batched Gram solve, and the single-inner-iteration
+stopping signal is tracked per subproblem.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Callable
 
 import jax
@@ -34,6 +44,15 @@ class InverseIterInfo:
     inner_iters: list
     eigenvalue: float
     residual: float
+
+
+@dataclasses.dataclass
+class BatchedInverseIterInfo:
+    outer_iters: np.ndarray    # (B,) outer iteration count at convergence
+    inner_iters: list          # per outer step: (B,) inner-iteration counts
+    eigenvalue: np.ndarray     # (B,)
+    residual: np.ndarray       # (B,)
+    converged: np.ndarray      # (B,) bool
 
 
 def _rayleigh(op, y, mask):
@@ -90,18 +109,28 @@ def inverse_iteration(
             W = jnp.stack(lys, axis=1)       # (n, m)
             G = Y.T @ W                      # (m, m) Gram in L-inner product
             rhs = Y.T @ b
-            coef = jnp.linalg.solve(G + 1e-12 * jnp.eye(G.shape[0]), rhs)
+            # Ridge scaled to the Gram (an absolute 1e-12 is below fp32
+            # epsilon: near-duplicate iterates make G singular → NaN x0).
+            ridge = 1e-5 * jnp.trace(G) / G.shape[0] + 1e-20
+            coef = jnp.linalg.solve(G + ridge * jnp.eye(G.shape[0]), rhs)
             x0 = Y @ coef
+            x0 = jnp.where(jnp.isfinite(x0).all(), x0, jnp.zeros_like(b))
         else:
             x0 = None
         result: CGResult = solve(b, x0 if x0 is not None else jnp.zeros_like(b))
         y = result.x
         inner_counts.append(int(result.iters))
 
+        b_prev = b
         ynorm = jnp.maximum(jnp.linalg.norm(y), 1e-30)
         b = _project_out_ones(y / ynorm, mask)
         b = b / jnp.maximum(jnp.linalg.norm(b), 1e-30)
         lam, res = _rayleigh(opj, b, mask)
+        if not (np.isfinite(float(lam)) and np.isfinite(float(res))):
+            # Numerical breakdown: keep the last good iterate and stop.
+            b = b_prev
+            lam, res = _rayleigh(opj, b, mask)
+            break
 
         ys.append(b)
         lys.append(opj(b))
@@ -120,5 +149,146 @@ def inverse_iteration(
         inner_iters=inner_counts,
         eigenvalue=float(lam),
         residual=float(res),
+    )
+    return b, info
+
+
+# ---------------------------------------------------------------------------
+# Batched (level-synchronous) inverse iteration
+# ---------------------------------------------------------------------------
+
+def _rayleigh_batched(Ly, y):
+    den = jnp.maximum(jnp.sum(y * y, axis=-1), 1e-30)
+    lam = jnp.sum(y * Ly, axis=-1) / den
+    res = jnp.sqrt(jnp.sum((Ly - lam[:, None] * y) ** 2, axis=-1) / den)
+    return lam, res
+
+
+@partial(jax.jit, static_argnames=("jacobi", "inner_tol", "inner_maxiter"))
+def _batched_inner_solve(op, b, x0, mask, jacobi, inner_tol, inner_maxiter):
+    """One inner solve + renormalization + Rayleigh quotient, all batched.
+
+    `op` is a pytree operator (traced argument → one trace per shape
+    bucket).  With `jacobi=True` the preconditioner is built from the
+    operator's own diagonal (padding rows have diag 0 → identity there).
+    """
+    pre = None
+    if jacobi:
+        inv_d = jnp.where(op.diag > 0, 1.0 / jnp.maximum(op.diag, 1e-30), 0.0)
+        pre = lambda r: r * inv_d  # noqa: E731
+    result = flexcg(
+        op, b, precond=pre, x0=x0, mask=mask,
+        tol=inner_tol, maxiter=inner_maxiter,
+    )
+    y = result.x
+    ynorm = jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True), 1e-30)
+    b_new = _project_out_ones(y / ynorm, mask)
+    b_new = b_new / jnp.maximum(
+        jnp.linalg.norm(b_new, axis=-1, keepdims=True), 1e-30
+    )
+    Ly = op(b_new)
+    lam, res = _rayleigh_batched(Ly, b_new)
+    return b_new, lam, res, result.iters, Ly
+
+
+@jax.jit
+def _apply_op(op, x):
+    """Module-level jitted matvec: the compile cache is shared by every
+    bucket/level of a run (a per-call `jax.jit(lambda ...)` would re-trace
+    each time)."""
+    return op(x)
+
+
+@jax.jit
+def _augmented_projection(Y, W, b):
+    """x0 = Y (Yᵀ L Y)⁻¹ Yᵀ b per subproblem (Y (B, n, m), W = L Y).
+
+    The ridge is scaled to each Gram (fp32 near-duplicate iterates make G
+    singular) and a non-finite solve falls back to x0 = 0 per problem."""
+    G = jnp.einsum("bnm,bnk->bmk", Y, W)
+    rhs = jnp.einsum("bnm,bn->bm", Y, b)
+    m = G.shape[-1]
+    tr = jnp.trace(G, axis1=-2, axis2=-1)
+    ridge = (1e-5 * tr / m + 1e-20)[:, None, None]
+    coef = jnp.linalg.solve(
+        G + ridge * jnp.eye(m, dtype=G.dtype), rhs[..., None]
+    )[..., 0]
+    x0 = jnp.einsum("bnm,bm->bn", Y, coef)
+    ok = jnp.isfinite(x0).all(axis=-1, keepdims=True)
+    return jnp.where(ok, x0, 0.0)
+
+
+def inverse_iteration_batched(
+    op,
+    n: int,
+    *,
+    mask: jax.Array,
+    b0: jax.Array,
+    max_outer: int = 30,
+    inner_tol: float = 1e-4,
+    inner_maxiter: int = 200,
+    tol: float = 1e-3,
+    proj_window: int = 5,
+) -> tuple[jax.Array, BatchedInverseIterInfo]:
+    """B inverse-iteration Fiedler solves in lockstep.
+
+    Returns (B (B, n) iterates, per-problem info).  An all-zero mask row is
+    a batch-padding dummy that converges immediately.
+    """
+    B = mask.shape[0]
+    b = _project_out_ones(b0.astype(jnp.float32), mask)
+    b = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True), 1e-30)
+
+    ys: list[jax.Array] = []
+    lys: list[jax.Array] = []
+    inner_counts: list[np.ndarray] = []
+    lam = np.zeros(B)
+    res = np.full(B, np.inf)
+    done = np.zeros(B, dtype=bool)
+    outer_iters = np.zeros(B, dtype=np.int64)
+    lb = _apply_op(op, b)  # L@b, kept in lockstep with b's freeze updates
+    for outer in range(1, max_outer + 1):
+        if ys:
+            Y = jnp.stack(ys, axis=-1)
+            W = jnp.stack(lys, axis=-1)
+            x0 = _augmented_projection(Y, W, b)
+        else:
+            x0 = jnp.zeros_like(b)
+        b_new, lam_new, res_new, iters, Ly_new = _batched_inner_solve(
+            op, b, x0, mask, True, inner_tol, inner_maxiter
+        )
+        iters_h = np.asarray(iters)
+        inner_counts.append(iters_h)
+        lam_h, res_h = np.asarray(lam_new), np.asarray(res_new)
+        finite = np.isfinite(lam_h) & np.isfinite(res_h)
+        upd = ~done & finite  # a non-finite update keeps the last good state
+        outer_iters[upd] = outer
+        lam = np.where(upd, lam_h, lam)
+        res = np.where(upd, res_h, res)
+        updj = jnp.asarray(upd)[:, None]
+        b = jnp.where(updj, b_new, b)
+        lb = jnp.where(updj, Ly_new, lb)
+
+        ys.append(b)
+        lys.append(lb)
+        if len(ys) > proj_window:
+            ys.pop(0)
+            lys.pop(0)
+
+        done |= res <= tol * np.maximum(lam, 1e-12)
+        done |= ~finite  # numerical breakdown: stop on the last good iterate
+        # Paper's stopping signal, per subproblem: a single-iteration inner
+        # solve means the Krylov space is invariant → eigenvector reached.
+        if outer > 1:
+            done |= finite & (iters_h <= 1)
+        if done.all():
+            break
+
+    info = BatchedInverseIterInfo(
+        outer_iters=outer_iters,
+        inner_iters=inner_counts,
+        eigenvalue=lam,
+        residual=res,
+        converged=done,
     )
     return b, info

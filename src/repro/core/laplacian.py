@@ -23,12 +23,20 @@ from repro.mesh.graphs import Graph, csr_to_ell
 class EllLaplacian:
     """L x = deg ⊙ x − A x with A in padded ELL form.
 
-    cols/vals: (n, width).  Padding entries have val 0 (col = row id).
+    cols/vals: (n, width) — or (B, n, width) for a **batched** operator
+    applying B independent Laplacians to (B, n) vectors in one shot (the
+    level-synchronous RSB engine's layout).  Padding entries have val 0
+    (col = row id).
+
+    Registered as a pytree (cols/vals/diag are leaves; n/use_kernel are
+    static) so a batched solve can take the operator as a *traced* jit
+    argument: one compiled trace serves every operator of the same shape
+    bucket instead of one trace per instance.
     """
 
-    cols: jax.Array    # (n, width) int32
-    vals: jax.Array    # (n, width) float32 — adjacency weights
-    diag: jax.Array    # (n,) float32 — Σ_j ω_ij (true Laplacian diagonal)
+    cols: jax.Array    # (..., n, width) int32
+    vals: jax.Array    # (..., n, width) float32 — adjacency weights
+    diag: jax.Array    # (..., n) float32 — Σ_j ω_ij (true Laplacian diagonal)
     n: int
     use_kernel: bool = False
 
@@ -36,6 +44,12 @@ class EllLaplacian:
         return id(self)
 
     def adj_apply(self, x: jax.Array) -> jax.Array:
+        if self.cols.ndim == 3:
+            B = self.cols.shape[0]
+            taken = jnp.take_along_axis(
+                x, self.cols.reshape(B, -1), axis=-1
+            ).reshape(self.cols.shape)
+            return (self.vals * taken).sum(-1)
         if self.use_kernel:
             from repro.kernels.ell_spmv import ops as _ops
 
@@ -47,6 +61,13 @@ class EllLaplacian:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.apply(x)
+
+
+jax.tree_util.register_dataclass(
+    EllLaplacian,
+    data_fields=("cols", "vals", "diag"),
+    meta_fields=("n", "use_kernel"),
+)
 
 
 def ell_laplacian(graph: Graph, *, use_kernel: bool = False) -> EllLaplacian:

@@ -1,17 +1,39 @@
 """Recursive Spectral Bisection driver (paper Algorithm 1).
 
-Host-orchestrated recursion (the bisection tree), jitted numerics per node:
+Two engines share the same math:
 
-  1. (optional) geometric pre-partitioning — RCB/RIB reorder of the active
-     elements (paper §8: ≈2× Lanczos speedup; also seeds AMG aggregation),
-  2. Fiedler vector of the active sub-mesh/sub-graph (Lanczos or
-     AMG-preconditioned inverse iteration),
-  3. sort by Fiedler component, split proportionally to ⌊P/2⌋ / ⌈P/2⌉
-     (element weights honored — multi-material support),
-  4. recurse until each part maps to a single processor.
+**engine="batched"** (default) — the level-synchronous engine.  All 2^L
+subdomains at level L of the bisection tree are independent (the paper
+splits communicators so their Fiedler solves run concurrently; Sphynx maps
+the same structure onto accelerator-batched linear algebra).  Each level:
+
+  1. (optional) geometric pre-partitioning — RCB/RIB reorder of every
+     active node's elements (paper §8: ≈2× Lanczos speedup),
+  2. every active subproblem is padded into a power-of-two
+     (n_pad, width_pad) **shape bucket** and the whole bucket runs ONE
+     jitted, vmapped Fiedler solve — batched ELL / gather-scatter Laplacian
+     applies, batched Lanczos windows (or Jacobi-preconditioned inverse
+     iteration with per-element-stopping batched flexcg), per-subproblem
+     masks and per-subproblem convergence flags,
+  3. a proportional split per node (sort by Fiedler component, cut at
+     ⌊P/2⌋ / ⌈P/2⌉ of the weight — multi-material support) emits the next
+     level's subgraphs via one vectorized multi-subgraph extraction.
+
+Because the batched operators are *pytrees* handed to jit as traced
+arguments, the run compiles one trace per shape bucket — a constant number
+per run — instead of one trace per tree node.  That is what turns the
+hardware-saturating batched matvecs into wall-clock wins, and the level
+structure is exactly what `repro.dist` needs to later shard levels across
+devices.
+
+**engine="recursive"** — the host-side depth-first recursion (one jitted
+solve per tree node), kept for parity testing and as the AMG-preconditioned
+inverse-iteration reference (AMG hierarchies are per-graph host state).
 
 Load-balance invariant (paper Eq. 2.6): with unit weights, part sizes
-differ by at most one element at every level — asserted in tests.
+differ by at most one element at every level — asserted in tests for both
+engines.  Per-node Lanczos start vectors are seeded deterministically from
+(seed, level, p_lo) so sibling subtrees never share a start vector.
 """
 
 from __future__ import annotations
@@ -21,9 +43,18 @@ import time
 
 import numpy as np
 
-from repro.core.fiedler import fiedler_from_graph, fiedler_from_mesh
+from repro.core.fiedler import (
+    _DENSE_CUTOFF,
+    fiedler_from_graph,
+    fiedler_from_graph_batched,
+    fiedler_from_mesh,
+    fiedler_from_mesh_batched,
+    next_pow2,
+)
 from repro.core.rcb import rcb_order, rib_order
-from repro.mesh.graphs import Graph, dual_graph_from_incidence
+from repro.mesh.graphs import Graph, dual_graph_from_incidence, extract_subgraphs
+
+_ENGINES = ("batched", "recursive")
 
 
 @dataclasses.dataclass
@@ -39,13 +70,44 @@ class BisectionRecord:
 
 
 @dataclasses.dataclass
+class LevelRecord:
+    """One tree level of the engine: how many nodes were solved together,
+    in which shape buckets, and where the time went."""
+
+    level: int
+    n_nodes: int             # nodes solved at this level
+    total_size: int          # Σ elements over those nodes
+    buckets: list            # [(count, n_pad)] — n_pad 0 = dense tail
+    iterations: int          # Σ per-node restarts / outer iterations
+    solve_seconds: float     # Fiedler solves (batched: the bucket solves)
+    split_seconds: float     # sort/split + child extraction
+
+
+@dataclasses.dataclass
 class RSBReport:
     records: list
     seconds: float
+    levels: list = dataclasses.field(default_factory=list)
+    engine: str = "recursive"
 
     @property
     def total_iterations(self) -> int:
         return sum(r.iterations for r in self.records)
+
+
+def _node_seed(seed: int, level: int, p_lo: int) -> int:
+    """Deterministic per-node seed.  `seed + level` alone would hand every
+    sibling at a level the identical Lanczos start vector; mixing in p_lo
+    (the node's part range origin — unique per node within a level)
+    decorrelates them."""
+    h = (seed * 0x9E3779B1 + level * 0x85EBCA77 + p_lo * 0xC2B2AE3D) & 0x7FFFFFFF
+    return int(h)
+
+
+def _warm_vector(c: np.ndarray) -> np.ndarray:
+    """Geometric warm start: centroid coordinate along the longest axis."""
+    ax = int(np.argmax(c.max(0) - c.min(0)))
+    return (c[:, ax] - c[:, ax].mean()).astype(np.float32)
 
 
 def _proportional_split(keys: np.ndarray, weights: np.ndarray, n_left: int,
@@ -57,6 +119,39 @@ def _proportional_split(keys: np.ndarray, weights: np.ndarray, n_left: int,
     k = min(max(k, 1), keys.size - 1)
     return order[:k], order[k:]
 
+
+def _size_buckets(sizes: list) -> list:
+    """Group node sizes into the (count, n_pad) shape buckets they solve in."""
+    counts: dict = {}
+    for s in sizes:
+        key = 0 if s <= _DENSE_CUTOFF else next_pow2(s)
+        counts[key] = counts.get(key, 0) + 1
+    return sorted((c, k) for k, c in counts.items())
+
+
+def _levels_from_records(records: list) -> list:
+    """Aggregate per-node records into per-level records (recursive engine)."""
+    by_level: dict = {}
+    for r in records:
+        by_level.setdefault(r.level, []).append(r)
+    out = []
+    for level in sorted(by_level):
+        rs = by_level[level]
+        out.append(LevelRecord(
+            level=level,
+            n_nodes=len(rs),
+            total_size=sum(r.size for r in rs),
+            buckets=_size_buckets([r.size for r in rs]),
+            iterations=sum(r.iterations for r in rs),
+            solve_seconds=sum(r.seconds for r in rs),
+            split_seconds=0.0,
+        ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mesh drivers
+# ---------------------------------------------------------------------------
 
 def rsb_partition_mesh(
     mesh,
@@ -70,14 +165,31 @@ def rsb_partition_mesh(
     max_restarts: int = 50,
     seed: int = 0,
     warm_start: bool = False,
+    engine: str = "batched",
 ) -> tuple[np.ndarray, RSBReport]:
     """Partition a HexMesh into `nparts` via RSB on its dual graph.
 
-    warm_start=True (beyond-paper) seeds the Fiedler solve with the
-    centroid coordinate along the subset's longest axis — an excellent
-    initial guess on mesh-like graphs that cuts Lanczos restarts."""
+    engine="batched" solves every bisection of a tree level in one vmapped
+    Fiedler solve per shape bucket; engine="recursive" is the sequential
+    per-node reference (and the only path with AMG-preconditioned inverse
+    iteration).  warm_start=True (beyond-paper) seeds the Fiedler solve
+    with the centroid coordinate along the subset's longest axis — an
+    excellent initial guess on mesh-like graphs that cuts Lanczos restarts.
+    """
     if laplacian not in ("weighted", "unweighted"):
         raise ValueError(laplacian)
+    if engine not in _ENGINES:
+        raise ValueError(f"unknown engine: {engine}")
+    kw = dict(method=method, pre=pre, tol=tol, window=window,
+              max_restarts=max_restarts, seed=seed, warm_start=warm_start)
+    if engine == "batched":
+        return _rsb_mesh_batched(mesh, nparts, **kw)
+    return _rsb_mesh_recursive(mesh, nparts, **kw)
+
+
+def _rsb_mesh_recursive(
+    mesh, nparts, *, method, pre, tol, window, max_restarts, seed, warm_start
+) -> tuple[np.ndarray, RSBReport]:
     records: list[BisectionRecord] = []
     parts = np.zeros(mesh.nelems, dtype=np.int64)
     t0 = time.perf_counter()
@@ -101,16 +213,12 @@ def rsb_partition_mesh(
                 inv.reshape(sub_vg.shape), uniq.size, idx.size
             )
             order_amg = np.arange(idx.size)  # already RCB-ordered above
-        warm = None
-        if warm_start:
-            c = mesh.coords[idx]
-            ax = int(np.argmax(c.max(0) - c.min(0)))
-            warm = (c[:, ax] - c[:, ax].mean()).astype(np.float32)
+        warm = _warm_vector(mesh.coords[idx]) if warm_start else None
         t = time.perf_counter()
         res = fiedler_from_mesh(
             sub_vg, method=method, graph_for_amg=graph_amg, order=order_amg,
-            seed=seed + level, tol=tol, window=window, max_restarts=max_restarts,
-            warm=warm,
+            seed=_node_seed(seed, level, p_lo), tol=tol, window=window,
+            max_restarts=max_restarts, warm=warm,
         )
         dt = time.perf_counter() - t
         records.append(BisectionRecord(
@@ -124,8 +232,92 @@ def rsb_partition_mesh(
         rec(idx[hi], p_lo + n_left, p_hi, level + 1)
 
     rec(np.arange(mesh.nelems, dtype=np.int64), 0, nparts, 0)
-    return parts, RSBReport(records=records, seconds=time.perf_counter() - t0)
+    return parts, RSBReport(
+        records=records, seconds=time.perf_counter() - t0,
+        levels=_levels_from_records(records), engine="recursive",
+    )
 
+
+def _rsb_mesh_batched(
+    mesh, nparts, *, method, pre, tol, window, max_restarts, seed, warm_start
+) -> tuple[np.ndarray, RSBReport]:
+    records: list[BisectionRecord] = []
+    levels: list[LevelRecord] = []
+    parts = np.zeros(mesh.nelems, dtype=np.int64)
+    t0 = time.perf_counter()
+
+    # Run-wide shape-bucket pins: a level's subproblems partition the root
+    # set, so their padded blocks always fit the root's padded size — one
+    # compiled trace serves every level (and every same-shape run).
+    pack_slots = next_pow2(max(mesh.nelems, 2))
+    pack_segs = next_pow2(max(nparts, 1))
+
+    active = [(np.arange(mesh.nelems, dtype=np.int64), 0, nparts)]
+    level = 0
+    while active:
+        solve_nodes = []
+        for idx, p_lo, p_hi in active:
+            if p_hi - p_lo <= 1 or idx.size <= 1:
+                parts[idx] = p_lo
+                continue
+            if pre in ("rcb", "rib"):
+                fn = rcb_order if pre == "rcb" else rib_order
+                idx = idx[fn(mesh.coords[idx], mesh.weights[idx])]
+            solve_nodes.append((idx, p_lo, p_hi))
+        if not solve_nodes:
+            break
+
+        t_solve = time.perf_counter()
+        results = fiedler_from_mesh_batched(
+            [mesh.vert_gid[idx] for idx, _, _ in solve_nodes],
+            method=method,
+            seeds=[_node_seed(seed, level, p_lo) for _, p_lo, _ in solve_nodes],
+            warms=[
+                _warm_vector(mesh.coords[idx]) if warm_start else None
+                for idx, _, _ in solve_nodes
+            ],
+            tol=tol, window=window, max_restarts=max_restarts,
+            pack_slots=pack_slots, pack_segs=pack_segs,
+        )
+        solve_dt = time.perf_counter() - t_solve
+
+        t_split = time.perf_counter()
+        next_active = []
+        for (idx, p_lo, p_hi), res in zip(solve_nodes, results):
+            np_here = p_hi - p_lo
+            records.append(BisectionRecord(
+                level=level, size=int(idx.size), nparts=np_here,
+                method=res.method, iterations=res.iterations,
+                eigenvalue=res.eigenvalue, residual=res.residual,
+                seconds=solve_dt / len(solve_nodes),
+            ))
+            n_left = np_here // 2
+            lo, hi = _proportional_split(
+                res.vector, mesh.weights[idx], n_left, np_here
+            )
+            next_active.append((idx[lo], p_lo, p_lo + n_left))
+            next_active.append((idx[hi], p_lo + n_left, p_hi))
+        levels.append(LevelRecord(
+            level=level,
+            n_nodes=len(solve_nodes),
+            total_size=sum(int(idx.size) for idx, _, _ in solve_nodes),
+            buckets=_size_buckets([int(idx.size) for idx, _, _ in solve_nodes]),
+            iterations=sum(r.iterations for r in results),
+            solve_seconds=solve_dt,
+            split_seconds=time.perf_counter() - t_split,
+        ))
+        active = next_active
+        level += 1
+
+    return parts, RSBReport(
+        records=records, seconds=time.perf_counter() - t0,
+        levels=levels, engine="batched",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Graph drivers
+# ---------------------------------------------------------------------------
 
 def rsb_partition_graph(
     graph: Graph,
@@ -134,20 +326,43 @@ def rsb_partition_graph(
     coords: np.ndarray | None = None,
     weights: np.ndarray | None = None,
     method: str = "lanczos",
-    pre: str | None = None,
+    pre: str | None = "rcb",
     tol: float = 1e-3,
     window: int = 30,
     max_restarts: int = 50,
     seed: int = 0,
+    warm_start: bool = False,
     use_kernel: bool = False,
+    engine: str = "batched",
 ) -> tuple[np.ndarray, RSBReport]:
     """Partition a generic graph (assembled ELL Laplacian) via RSB.
+
+    `pre` defaults to "rcb" to match the mesh path (paper §8's geometric
+    pre-partitioning); it is a no-op when `coords` is not given.
 
     This is the entry point the framework's partition-aware GNN sharding
     uses: feed the returned `parts` to
     `repro.dist.partition_aware.plan_halo_sharding` to get the shard_map
     halo plan whose all_gather volume is proportional to this cut.
+
+    warm_start=True seeds each node's Fiedler solve from `coords` (the
+    centroid coordinate along the subset's longest axis), matching the mesh
+    path's ≈2× restart reduction; it is a no-op without coords.
     """
+    if engine not in _ENGINES:
+        raise ValueError(f"unknown engine: {engine}")
+    kw = dict(coords=coords, weights=weights, method=method, pre=pre, tol=tol,
+              window=window, max_restarts=max_restarts, seed=seed,
+              warm_start=warm_start, use_kernel=use_kernel)
+    if engine == "batched":
+        return _rsb_graph_batched(graph, nparts, **kw)
+    return _rsb_graph_recursive(graph, nparts, **kw)
+
+
+def _rsb_graph_recursive(
+    graph, nparts, *, coords, weights, method, pre, tol, window, max_restarts,
+    seed, warm_start, use_kernel,
+) -> tuple[np.ndarray, RSBReport]:
     n = graph.n
     w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
     records: list[BisectionRecord] = []
@@ -164,10 +379,14 @@ def rsb_partition_graph(
             perm = fn(coords[idx], w[idx])
             idx = idx[perm]
             g = g.sub(perm)
+        warm = None
+        if warm_start and coords is not None:
+            warm = _warm_vector(coords[idx])
         t = time.perf_counter()
         res = fiedler_from_graph(
-            g, method=method, order=None, seed=seed + level, tol=tol,
-            window=window, max_restarts=max_restarts, use_kernel=use_kernel,
+            g, method=method, order=None, seed=_node_seed(seed, level, p_lo),
+            warm=warm, tol=tol, window=window, max_restarts=max_restarts,
+            use_kernel=use_kernel,
         )
         dt = time.perf_counter() - t
         records.append(BisectionRecord(
@@ -181,7 +400,96 @@ def rsb_partition_graph(
         rec(g.sub(hi), idx[hi], p_lo + n_left, p_hi, level + 1)
 
     rec(graph, np.arange(n, dtype=np.int64), 0, nparts, 0)
-    return parts, RSBReport(records=records, seconds=time.perf_counter() - t0)
+    return parts, RSBReport(
+        records=records, seconds=time.perf_counter() - t0,
+        levels=_levels_from_records(records), engine="recursive",
+    )
+
+
+def _rsb_graph_batched(
+    graph, nparts, *, coords, weights, method, pre, tol, window, max_restarts,
+    seed, warm_start, use_kernel,
+) -> tuple[np.ndarray, RSBReport]:
+    n = graph.n
+    w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
+    records: list[BisectionRecord] = []
+    levels: list[LevelRecord] = []
+    parts = np.zeros(n, dtype=np.int64)
+    t0 = time.perf_counter()
+
+    # Run-wide shape-bucket pins (see _rsb_mesh_batched): subgraph degrees
+    # never exceed the root's, so the root ELL width bounds every level.
+    pack_slots = next_pow2(max(n, 2))
+    pack_segs = next_pow2(max(nparts, 1))
+    root_width = int(graph.degrees.max()) if graph.nnz else 1
+    width_pad = next_pow2(max(root_width, 2))
+
+    active = [(graph, np.arange(n, dtype=np.int64), 0, nparts)]
+    level = 0
+    while active:
+        solve_nodes = []
+        for g, idx, p_lo, p_hi in active:
+            if p_hi - p_lo <= 1 or idx.size <= 1:
+                parts[idx] = p_lo
+                continue
+            if pre in ("rcb", "rib") and coords is not None:
+                fn = rcb_order if pre == "rcb" else rib_order
+                perm = fn(coords[idx], w[idx])
+                idx = idx[perm]
+                g = g.sub(perm)
+            solve_nodes.append((g, idx, p_lo, p_hi))
+        if not solve_nodes:
+            break
+
+        t_solve = time.perf_counter()
+        results = fiedler_from_graph_batched(
+            [g for g, _, _, _ in solve_nodes],
+            method=method,
+            seeds=[_node_seed(seed, level, p_lo) for _, _, p_lo, _ in solve_nodes],
+            warms=[
+                _warm_vector(coords[idx]) if warm_start and coords is not None
+                else None
+                for _, idx, _, _ in solve_nodes
+            ],
+            tol=tol, window=window, max_restarts=max_restarts,
+            pack_slots=pack_slots, pack_segs=pack_segs, width_pad=width_pad,
+            use_kernel=use_kernel,
+        )
+        solve_dt = time.perf_counter() - t_solve
+
+        t_split = time.perf_counter()
+        next_active = []
+        for (g, idx, p_lo, p_hi), res in zip(solve_nodes, results):
+            np_here = p_hi - p_lo
+            records.append(BisectionRecord(
+                level=level, size=int(idx.size), nparts=np_here,
+                method=res.method, iterations=res.iterations,
+                eigenvalue=res.eigenvalue, residual=res.residual,
+                seconds=solve_dt / len(solve_nodes),
+            ))
+            n_left = np_here // 2
+            lo, hi = _proportional_split(res.vector, w[idx], n_left, np_here)
+            g_lo, g_hi = extract_subgraphs(g, [lo, hi])
+            next_active.append((g_lo, idx[lo], p_lo, p_lo + n_left))
+            next_active.append((g_hi, idx[hi], p_lo + n_left, p_hi))
+        levels.append(LevelRecord(
+            level=level,
+            n_nodes=len(solve_nodes),
+            total_size=sum(int(idx.size) for _, idx, _, _ in solve_nodes),
+            buckets=_size_buckets(
+                [int(idx.size) for _, idx, _, _ in solve_nodes]
+            ),
+            iterations=sum(r.iterations for r in results),
+            solve_seconds=solve_dt,
+            split_seconds=time.perf_counter() - t_split,
+        ))
+        active = next_active
+        level += 1
+
+    return parts, RSBReport(
+        records=records, seconds=time.perf_counter() - t0,
+        levels=levels, engine="batched",
+    )
 
 
 def partition(
@@ -191,9 +499,16 @@ def partition(
     partitioner: str = "rsb",
     coords: np.ndarray | None = None,
     weights: np.ndarray | None = None,
+    engine: str = "batched",
     **kw,
 ) -> np.ndarray:
-    """Uniform front door: partitioner ∈ {rsb, rsb_inverse, rcb, rib, sfc, random}."""
+    """Uniform front door: partitioner ∈ {rsb, rsb_inverse, rcb, rib, sfc, random}.
+
+    `engine` selects the RSB driver: "batched" (default) runs every
+    bisection of a tree level in one jitted, vmapped Fiedler solve per
+    shape bucket; "recursive" is the sequential per-node reference.  The
+    flag is ignored by the geometric partitioners.
+    """
     from repro.core.rcb import rcb_parts, rib_parts
     from repro.core.sfc import sfc_parts
 
@@ -205,10 +520,13 @@ def partition(
     if partitioner in ("rsb", "rsb_lanczos", "rsb_inverse"):
         method = "inverse" if partitioner == "rsb_inverse" else kw.pop("method", "lanczos")
         if is_mesh:
-            parts, _ = rsb_partition_mesh(obj, nparts, method=method, **kw)
+            parts, _ = rsb_partition_mesh(
+                obj, nparts, method=method, engine=engine, **kw
+            )
         else:
             parts, _ = rsb_partition_graph(
-                obj, nparts, coords=c, weights=w, method=method, **kw
+                obj, nparts, coords=c, weights=w, method=method, engine=engine,
+                **kw
             )
         return parts
     if partitioner == "rcb":

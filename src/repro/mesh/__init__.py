@@ -6,6 +6,7 @@ from repro.mesh.graphs import (
     Graph,
     dual_graph,
     dual_graph_from_incidence,
+    extract_subgraphs,
     grid_graph_2d,
     grid_graph_3d,
     rmat_graph,
