@@ -1,6 +1,8 @@
 """Paper Tables 1–2 analogue: Lanczos vs inverse iteration on a pebble-bed
 mesh, with and without RCB pre-partitioning — for BOTH RSB engines (the
-level-synchronous batched engine vs the recursive per-node reference).
+level-synchronous batched engine vs the recursive per-node reference), and
+for the batched inverse path with BOTH preconditioners (Jacobi vs the
+packed multilevel AMG V-cycle).
 
 Validates:
   C2 — RCB pre-partitioning speeds up RSB (here: wall time on CPU AND the
@@ -15,9 +17,10 @@ becomes a ~3–8k-element mesh on 8–32 parts; the OBSERVABLES (neighbor
 counts, iteration counts, relative speedups) are the comparable quantities.
 
 `smoke=True` is the CI regression config (see benchmarks/smoke_check.py):
-a small mesh, batched engine, both solver families — fast enough for every
-push, and its edge cut is gated against the checked-in
-BENCH_partition.json baseline.
+a small mesh, batched engine, both solver families and both inverse
+preconditioners — fast enough for every push.  Its edge cut AND its total
+wall clock are gated against the checked-in BENCH_partition.json baseline;
+rows are matched on (engine, method, pre, precond).
 """
 
 from __future__ import annotations
@@ -53,34 +56,51 @@ def run(
     rows = []
     for engine in engines:
         for method in methods:
-            for pre in (None, "rcb"):
-                t0 = time.perf_counter()
-                parts, report = rsb_partition_mesh(
-                    mesh, nparts, method=method, pre=pre, tol=1e-3,
-                    engine=engine,
-                )
-                dt = time.perf_counter() - t0
-                pm = partition_metrics(graph, parts, nparts, weights=mesh.weights)
-                halo = plan_halo_sharding(graph, parts, nparts).halo
-                rows.append({
-                    "engine": engine,
-                    "method": method, "pre": pre or "none",
-                    "seconds": dt, "iters": report.total_iterations,
-                    "levels": len(report.levels),
-                    "cut": pm.edge_cut,
-                    "max_nbrs": pm.max_neighbors, "avg_nbrs": pm.avg_neighbors,
-                    "imbalance": pm.imbalance, "w_imb": pm.weighted_imbalance,
-                    "volume": pm.total_volume,
-                    "halo": halo,
-                })
-                emit(
-                    f"{emit_prefix}/{engine}/{method}/pre={pre or 'none'}",
-                    dt * 1e6,
-                    f"E={mesh.nelems};P={nparts};iters={report.total_iterations};"
-                    f"cut={pm.edge_cut:.0f};max_nbrs={pm.max_neighbors};"
-                    f"avg_nbrs={pm.avg_neighbors:.1f};"
-                    f"w_imb={pm.weighted_imbalance:.3f};halo={halo}",
-                )
+            # The batched inverse path carries the Jacobi-vs-multilevel
+            # preconditioner comparison (Sphynx's point: the preconditioner,
+            # not the matvec, dominates spectral-partitioner cost); the
+            # recursive inverse reference is inherently AMG-preconditioned.
+            if method == "inverse" and engine == "batched":
+                preconds = ("jacobi", "amg")
+            else:
+                preconds = ("jacobi",)
+            for precond in preconds:
+                for pre in (None, "rcb"):
+                    t0 = time.perf_counter()
+                    parts, report = rsb_partition_mesh(
+                        mesh, nparts, method=method, pre=pre, tol=1e-3,
+                        engine=engine, precond=precond,
+                    )
+                    dt = time.perf_counter() - t0
+                    pm = partition_metrics(graph, parts, nparts,
+                                           weights=mesh.weights)
+                    halo = plan_halo_sharding(graph, parts, nparts).halo
+                    rows.append({
+                        "engine": engine,
+                        "method": method, "pre": pre or "none",
+                        "precond": report.precond,
+                        "precond_levels": report.precond_levels,
+                        "seconds": dt, "iters": report.total_iterations,
+                        "levels": len(report.levels),
+                        "cut": pm.edge_cut,
+                        "max_nbrs": pm.max_neighbors,
+                        "avg_nbrs": pm.avg_neighbors,
+                        "imbalance": pm.imbalance,
+                        "w_imb": pm.weighted_imbalance,
+                        "volume": pm.total_volume,
+                        "halo": halo,
+                    })
+                    emit(
+                        f"{emit_prefix}/{engine}/{method}/pre={pre or 'none'}"
+                        f"/precond={report.precond}",
+                        dt * 1e6,
+                        f"E={mesh.nelems};P={nparts};"
+                        f"iters={report.total_iterations};"
+                        f"mlv={report.precond_levels};"
+                        f"cut={pm.edge_cut:.0f};max_nbrs={pm.max_neighbors};"
+                        f"avg_nbrs={pm.avg_neighbors:.1f};"
+                        f"w_imb={pm.weighted_imbalance:.3f};halo={halo}",
+                    )
     return rows
 
 

@@ -25,18 +25,31 @@ def run(dims=(12, 12, 12), nparts=16, full: bool = False) -> list:
     graph = dual_graph(mesh)
     rows = []
 
-    def record(name, parts, dt, engine="-"):
+    def record(name, parts, dt, engine="-", report=None):
         pm = partition_metrics(graph, parts, nparts)
         halo = plan_halo_sharding(graph, parts, nparts).halo
-        rows.append({"name": name, "engine": engine, "seconds": dt,
-                     "cut": pm.edge_cut,
-                     "volume": pm.total_volume, "max_nbrs": pm.max_neighbors,
-                     "avg_nbrs": pm.avg_neighbors, "halo": halo,
-                     "imbalance": pm.imbalance})
+        row = {"name": name, "engine": engine, "seconds": dt,
+               "cut": pm.edge_cut,
+               "volume": pm.total_volume, "max_nbrs": pm.max_neighbors,
+               "avg_nbrs": pm.avg_neighbors, "halo": halo,
+               "imbalance": pm.imbalance}
+        if report is not None:
+            # Solver provenance: geometric pre-pass, preconditioner family,
+            # multilevel hierarchy depth, and total iteration count.
+            row.update({"pre": report.pre, "precond": report.precond,
+                        "precond_levels": report.precond_levels,
+                        "iters": report.total_iterations})
+        rows.append(row)
+        extra = ""
+        if report is not None:
+            extra = (f";pre={report.pre};precond={report.precond};"
+                     f"mlv={report.precond_levels};"
+                     f"iters={report.total_iterations}")
         emit(
             f"quality/{name}", dt * 1e6,
             f"cut={pm.edge_cut:.0f};volume={pm.total_volume:.0f};"
-            f"max_nbrs={pm.max_neighbors};halo={halo};imb={pm.imbalance}",
+            f"max_nbrs={pm.max_neighbors};halo={halo};imb={pm.imbalance}"
+            + extra,
         )
 
     # RSB rows carry the engine comparison: the level-synchronous batched
@@ -44,12 +57,12 @@ def run(dims=(12, 12, 12), nparts=16, full: bool = False) -> list:
     for engine in ("batched", "recursive"):
         for lap in ("weighted", "unweighted"):
             t0 = time.perf_counter()
-            parts, _ = rsb_partition_mesh(
+            parts, report = rsb_partition_mesh(
                 mesh, nparts, laplacian=lap, tol=1e-3, engine=engine,
             )
             suffix = "" if engine == "batched" else "_recursive"
             record(f"rsb_{lap}{suffix}", parts, time.perf_counter() - t0,
-                   engine=engine)
+                   engine=engine, report=report)
     for name in ("rcb", "rib", "sfc", "random"):
         t0 = time.perf_counter()
         parts = partition(mesh, nparts, partitioner=name)

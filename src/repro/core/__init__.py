@@ -12,6 +12,7 @@ from repro.core.gather_scatter import (
 from repro.core.laplacian import (
     EllLaplacian,
     ell_laplacian,
+    ell_laplacian_batched,
     dense_laplacian_np,
     fiedler_oracle_np,
 )
@@ -22,12 +23,14 @@ from repro.core.inverse_iteration import (inverse_iteration,
                                           inverse_iteration_batched,
                                           InverseIterInfo,
                                           BatchedInverseIterInfo)
-from repro.core.amg import AMG, amg_setup, coarsen_graph
+from repro.core.amg import (AMG, BatchedAMG, amg_setup, amg_setup_batched,
+                            coarsen_graph)
 from repro.core.rcb import rcb_order, rib_order, rcb_parts, rib_parts
 from repro.core.sfc import sfc_parts, sfc_order, hilbert_index, morton_index
 from repro.core.fiedler import (fiedler_from_graph, fiedler_from_mesh, FiedlerResult,
                                 fiedler_from_graph_batched, fiedler_from_mesh_batched,
-                                fiedler_pair_from_graph, best_cut_in_pair)
+                                fiedler_pair_from_graph, best_cut_in_pair,
+                                multilevel_warm_start)
 from repro.core.rsb import (
     rsb_partition_mesh,
     rsb_partition_graph,

@@ -19,6 +19,21 @@ robustness improvement over pure smoothing at the coarsest level (recorded
 as an implementation choice, not a paper deviation: the paper's coarsest
 level is "a single row per processor" and the all-ones nullspace is handled
 by the outer projection either way).
+
+Two forms share the math:
+
+* `AMG` (`amg_setup`) — one graph, ragged per-level sizes, host recursion.
+* `BatchedAMG` (`amg_setup_batched`) — B graphs padded to a shared
+  power-of-two level ladder (n_pad, n_pad/2, …), each level one
+  leading-batch-dim `EllLaplacian`, packed exactly like the
+  level-synchronous engine packs its operators.  Because every problem is
+  RCB-ordered and padded to the same n_pad, the pairwise aggregation map
+  `i → i // 2` is IDENTICAL across problems and levels, so restriction is
+  a reshape-sum and prolongation a repeat — no per-problem index maps on
+  device, and the whole preconditioner is a pytree that rides through the
+  jitted batched flexcg as a traced argument (one trace per shape bucket).
+  Padding rows carry zero operator rows, so they stay zero through the
+  cycle and the outer masked projection discards any prolongation spill.
 """
 
 from __future__ import annotations
@@ -29,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.laplacian import EllLaplacian, ell_laplacian
+from repro.core.laplacian import EllLaplacian, ell_laplacian, ell_laplacian_batched
 from repro.mesh.graphs import Graph, build_csr
 
 
@@ -87,6 +102,65 @@ class AMG:
         return u
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchedAMG:
+    """Jittable leading-batch-dim V-cycle: `pre(r) -> u ≈ L⁻¹ r` for
+    r of shape (B, n_pad).
+
+    Registered as a pytree (level operators + coarse pinv are leaves;
+    sizes/sigma/n_smooth are static) so the batched inverse-iteration
+    solve can take the preconditioner as a *traced* jit argument — one
+    compiled trace serves every bucket of the same shape, exactly like
+    the engine's operators.
+    """
+
+    ops: tuple            # per-level EllLaplacian, arrays (B, n_l, w_l)
+    sizes: tuple          # per-level padded row counts (n_pad >> l)
+    coarse_pinv: jax.Array  # (B, nc, nc)
+    sigma: float
+    n_smooth: int
+
+    def __hash__(self):
+        return id(self)
+
+    def __call__(self, r: jax.Array) -> jax.Array:
+        return self._cycle(0, r)
+
+    def _smooth(self, L: EllLaplacian, u, rr, inv_d):
+        for _ in range(self.n_smooth):
+            du = self.sigma * rr * inv_d
+            u = u + du
+            rr = rr - L.apply(du)
+        return u, rr
+
+    def _cycle(self, lvl: int, r: jax.Array) -> jax.Array:
+        if lvl == len(self.ops):
+            return jnp.einsum("bij,bj->bi", self.coarse_pinv, r)
+        L = self.ops[lvl]
+        inv_d = jnp.where(L.diag > 0, 1.0 / jnp.maximum(L.diag, 1e-30), 0.0)
+        u = self.sigma * r * inv_d
+        rr = r - L.apply(u)
+        u, rr = self._smooth(L, u, rr, inv_d)
+        # Restrict: the shared pairwise aggregation i → i//2 is a
+        # reshape-sum (Jᵀ); prolong (J) is a repeat.
+        B = r.shape[0]
+        rc = rr.reshape(B, self.sizes[lvl + 1], 2).sum(-1)
+        ec = self._cycle(lvl + 1, rc)
+        u = u + jnp.repeat(ec, 2, axis=-1)
+        rr = r - L.apply(u)
+        for _ in range(self.n_smooth):
+            u = u + self.sigma * rr * inv_d
+            rr = r - L.apply(u)
+        return u
+
+
+jax.tree_util.register_dataclass(
+    BatchedAMG,
+    data_fields=("ops", "coarse_pinv"),
+    meta_fields=("sizes", "sigma", "n_smooth"),
+)
+
+
 def amg_setup(
     graph: Graph,
     *,
@@ -132,6 +206,63 @@ def amg_setup(
         aggs=tuple(jnp.asarray(a.astype(np.int32)) for a in aggs),
         sizes=tuple(sizes),
         coarse_pinv=jnp.asarray(pinv.astype(np.float32)),
+        sigma=sigma,
+        n_smooth=n_smooth,
+    )
+
+
+def amg_setup_batched(
+    graphs: list,
+    n_pad: int,
+    b_pad: int,
+    *,
+    coarse_size: int = 16,
+    sigma: float = 2.0 / 3.0,
+    n_smooth: int = 1,
+) -> BatchedAMG:
+    """Build one packed V-cycle hierarchy for B graphs (host NumPy).
+
+    `n_pad` (a power of two ≥ every graph's n) fixes the shared level
+    ladder n_pad, n_pad/2, … down to `coarse_size`; each graph is
+    Galerkin-coarsened along it (`coarsen_graph` with the same pairwise
+    aggregation `amg_setup` uses — feed RCB-ordered graphs, as the engine
+    does).  Graphs whose real size bottoms out early just carry empty
+    coarse rows; batch-padding rows (b ≥ len(graphs)) are all-zero
+    operators with a zero coarse pinv, so dummy problems stay inert.
+    """
+    if n_pad & (n_pad - 1):
+        raise ValueError(f"n_pad must be a power of two, got {n_pad}")
+    if any(g.n > n_pad for g in graphs):
+        raise ValueError("n_pad below a graph size")
+    level_graphs: list[list[Graph]] = [list(graphs)]
+    sizes = [n_pad]
+    while sizes[-1] > coarse_size:
+        nxt = [
+            coarsen_graph(g, np.arange(g.n, dtype=np.int64) // 2, (g.n + 1) // 2)
+            for g in level_graphs[-1]
+        ]
+        level_graphs.append(nxt)
+        sizes.append(sizes[-1] // 2)
+
+    from repro.core.laplacian import dense_laplacian_np
+
+    ops = []
+    for lvl in range(len(sizes) - 1):
+        gs = level_graphs[lvl]
+        width = max([int(g.degrees.max()) if g.nnz else 1 for g in gs] + [1])
+        width_pad = 1 << max(0, (max(width, 2) - 1)).bit_length()
+        ops.append(ell_laplacian_batched(gs, sizes[lvl], width_pad, b_pad))
+
+    nc = sizes[-1]
+    pinv = np.zeros((b_pad, nc, nc), dtype=np.float32)
+    for b, g in enumerate(level_graphs[-1]):
+        Lc = np.zeros((nc, nc), dtype=np.float64)
+        Lc[: g.n, : g.n] = dense_laplacian_np(g)
+        pinv[b] = np.linalg.pinv(Lc, rcond=1e-10).astype(np.float32)
+    return BatchedAMG(
+        ops=tuple(ops),
+        sizes=tuple(sizes),
+        coarse_pinv=jnp.asarray(pinv),
         sigma=sigma,
         n_smooth=n_smooth,
     )

@@ -8,6 +8,12 @@ Adds the practical glue the RSB driver needs:
   * a dense NumPy path for tiny subproblems (recursion tail),
   * optional geometric warm start (beyond-paper: seed with the coordinate
     along the dominant axis instead of noise — see EXPERIMENTS.md §Perf),
+  * **multilevel (coarse-to-fine) warm starts** (`multilevel_warm_start`,
+    on by default): a Galerkin hierarchy per subproblem (the `amg_setup`
+    pairwise aggregation), a dense Fiedler solve on the coarsest graph, and
+    a cascadic prolongation (one Jacobi-PCG inverse-iteration step per
+    level, host NumPy) whose output seeds the device solve — the fine-level
+    Lanczos then only *refines*, so callers can cap it at a few restarts,
   * **batched entry points** (`fiedler_from_graph_batched`,
     `fiedler_from_mesh_batched`): solve a whole RSB tree level at once.
     Subproblems are grouped into (n_pad, width_pad) **shape buckets**
@@ -24,12 +30,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.amg import amg_setup
+from repro.core.amg import amg_setup, amg_setup_batched, coarsen_graph
 from repro.core.gather_scatter import GSHandle, GSLaplacian, gs_setup, _build
 from repro.core.inverse_iteration import inverse_iteration, inverse_iteration_batched
-from repro.core.laplacian import EllLaplacian, dense_laplacian_np, ell_laplacian
+from repro.core.laplacian import (
+    EllLaplacian,
+    dense_laplacian_np,
+    ell_laplacian,
+    ell_laplacian_batched,
+    fill_ell_block as _fill_ell_block,
+)
 from repro.core.lanczos import lanczos_fiedler, lanczos_fiedler_batched
-from repro.mesh.graphs import Graph, csr_to_ell
+from repro.mesh.graphs import Graph, dual_graph_from_incidence
 
 _DENSE_CUTOFF = 192
 
@@ -45,21 +57,154 @@ class FiedlerResult:
     residual: float
     iterations: int        # restarts (lanczos) or outer iters (inverse)
     method: str
+    levels: int = 0        # multilevel warm-start hierarchy depth (0 = none)
 
 
-def _fill_ell_block(graph: Graph, C: np.ndarray, V: np.ndarray, D: np.ndarray,
-                    col_offset: int = 0) -> None:
-    """Fill one graph's rows of a padded ELL block (C/V/D are views of the
-    target rows; rows past graph.n keep self-columns and zero vals/diag,
-    so L acts as 0 on them).  The single home of the padding invariants —
-    the padded, batched, and packed builders all delegate here."""
-    cols, vals = csr_to_ell(graph, max_row=None)
-    nb, wb = cols.shape
-    if wb > C.shape[1]:
-        raise ValueError("width_pad below max degree")
-    C[:nb, :wb] = cols + col_offset
-    V[:nb, :wb] = vals
-    np.add.at(D[:nb], graph.rows, graph.weights)
+# ---------------------------------------------------------------------------
+# Multilevel (coarse-to-fine) warm starts — host NumPy, no compiled traces
+# ---------------------------------------------------------------------------
+
+def _lap_matvec_np(graph: Graph, deg: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Host Laplacian matvec L x = deg ⊙ x − A x over the COO view."""
+    ax = np.bincount(
+        graph.rows, weights=graph.weights * x[graph.indices], minlength=graph.n
+    )
+    return deg * x - ax
+
+
+def _cg_refine_np(graph: Graph, deg: np.ndarray, inv_d: np.ndarray,
+                  b: np.ndarray, iters: int) -> np.ndarray:
+    """One cascadic inverse-iteration step: ≈solve L x = b with `iters`
+    Jacobi-PCG steps, x₀ = b (host NumPy; every vector stays ⊥ 1)."""
+    x = b.copy()
+    r = b - _lap_matvec_np(graph, deg, x)
+    r -= r.mean()
+    z = inv_d * r
+    z -= z.mean()
+    p = z.copy()
+    rz = r @ z
+    for _ in range(iters):
+        w = _lap_matvec_np(graph, deg, p)
+        pw = p @ w
+        if abs(pw) < 1e-30:
+            break
+        a = rz / pw
+        x += a * p
+        r -= a * w
+        r -= r.mean()
+        z = inv_d * r
+        z -= z.mean()
+        rz_new = r @ z
+        if rz_new < 1e-30:
+            break
+        p = z + (rz_new / rz) * p
+        rz = rz_new
+    x -= x.mean()
+    return x
+
+
+def _rayleigh_ritz_pair_np(graph: Graph, deg: np.ndarray,
+                           V: np.ndarray) -> np.ndarray | None:
+    """Rayleigh–Ritz over span(V) (V: (n, k) candidates, k small): project
+    out constants, orthonormalize, rotate to the L-eigenbasis of the
+    subspace, columns sorted by ascending Ritz value.  None on breakdown."""
+    V = V - V.mean(axis=0, keepdims=True)
+    Q, _ = np.linalg.qr(V)
+    W = np.stack([_lap_matvec_np(graph, deg, Q[:, j]) for j in range(Q.shape[1])], 1)
+    G = Q.T @ W
+    G = 0.5 * (G + G.T)
+    if not np.isfinite(G).all():
+        return None
+    w, S = np.linalg.eigh(G)
+    return Q @ S[:, np.argsort(w)]
+
+
+def multilevel_warm_start(
+    graph: Graph,
+    *,
+    coarse_cutoff: int = _DENSE_CUTOFF,
+    refine_iters: int = 6,
+) -> tuple[np.ndarray | None, int]:
+    """Cascadic coarse-to-fine Fiedler warm start (returns (warm, n_levels)).
+
+    Builds the same pairwise Galerkin hierarchy as `amg_setup` (consecutive
+    nodes aggregate — callers feed RCB-ordered graphs, as the RSB engines
+    do after the geometric pre-pass), solves the coarsest eigenproblem
+    densely, then prolongs level by level with one Jacobi-PCG
+    inverse-iteration step per candidate and level.
+
+    A **block of two** candidates (y₂, y₃) rides the whole cascade with a
+    per-level 2×2 Rayleigh–Ritz rotation: pairwise aggregation can shrink
+    one graph axis faster than another, swapping the eigenvalue order
+    between levels (a 24×28 grid coarsens toward 24×14, so the coarse
+    Fiedler vector cuts the axis the FINE Fiedler vector does not) — a
+    single-vector cascade would then hand the device solve an accurate
+    approximation of the WRONG eigenvector, which satisfies the residual
+    stopping test at λ₃.  Tracking the pair and re-sorting by fine-level
+    Rayleigh quotient keeps the warm start on y₂.
+
+    Everything runs on the host: the warm start adds NO compiled traces,
+    and the device solve it seeds only needs a few refinement restarts
+    (the RSB engines cap it at `fine_restarts`).  Returns (None, 0) for
+    graphs at or below `coarse_cutoff` — those take the dense path
+    outright — and on numerical breakdown (caller falls back to noise).
+    """
+    if graph.n <= coarse_cutoff:
+        return None, 0
+    levels: list[Graph] = [graph]
+    aggs: list[np.ndarray] = []
+    while levels[-1].n > coarse_cutoff:
+        g = levels[-1]
+        agg = np.arange(g.n, dtype=np.int64) // 2
+        levels.append(coarsen_graph(g, agg, (g.n + 1) // 2))
+        aggs.append(agg)
+    w, v = np.linalg.eigh(dense_laplacian_np(levels[-1]))
+    V = v[:, 1:3] if v.shape[1] >= 3 else v[:, 1:2]   # (n_c, ≤2) candidates
+    for agg, g in zip(reversed(aggs), reversed(levels[:-1])):
+        V = V[agg]                           # piecewise-constant prolongation
+        deg = np.zeros(g.n)
+        np.add.at(deg, g.rows, g.weights)
+        inv_d = np.where(deg > 0, 1.0 / np.maximum(deg, 1e-30), 0.0)
+        cols = []
+        for j in range(V.shape[1]):
+            c = V[:, j] - V[:, j].mean()
+            nrm = np.linalg.norm(c)
+            if not np.isfinite(nrm) or nrm < 1e-30:
+                return None, 0               # degenerate level: fall back
+            cols.append(_cg_refine_np(g, deg, inv_d, c / nrm, refine_iters))
+        V = _rayleigh_ritz_pair_np(g, deg, np.stack(cols, 1))
+        if V is None:
+            return None, 0
+    vec = V[:, 0]
+    if not np.isfinite(vec).all():
+        return None, 0
+    return vec.astype(np.float32), len(aggs)
+
+
+_INVERSE_NOISE_BLEND = 0.3
+
+
+def _blend_noise(warm: np.ndarray, seed: int) -> np.ndarray:
+    """Mix a deterministic noise floor into a multilevel warm start.
+
+    Single-vector inverse iteration amplifies only the eigencomponents its
+    start vector contains: a prolonged coarse Fiedler vector that lands
+    (near-)orthogonal to y₂ — near-degenerate pairs, paper §9 — would trap
+    the iteration on the wrong eigenvector.  Lanczos is immune (it builds a
+    Krylov *subspace*), so only the inverse paths blend."""
+    z = _noise_b0(seed, warm.shape[0])
+    nw, nz = np.linalg.norm(warm), np.linalg.norm(z)
+    if nw < 1e-30 or nz < 1e-30:
+        return warm
+    return (warm / nw + _INVERSE_NOISE_BLEND * z / nz).astype(np.float32)
+
+
+def _graph_from_vert_gid(vert_gid: np.ndarray) -> Graph:
+    """Assembled dual graph of one sub-mesh (compacted vertex id space)."""
+    uniq, inv = np.unique(vert_gid, return_inverse=True)
+    return dual_graph_from_incidence(
+        inv.reshape(vert_gid.shape), uniq.size, vert_gid.shape[0]
+    )
 
 
 def _noise_b0(seed: int, n: int) -> np.ndarray:
@@ -143,12 +288,26 @@ def fiedler_from_graph(
     max_restarts: int = 50,
     pad: bool = True,
     use_kernel: bool = False,
+    multilevel: bool = True,
 ) -> FiedlerResult:
-    """Fiedler vector of an assembled graph Laplacian."""
+    """Fiedler vector of an assembled graph Laplacian.
+
+    `use_kernel=True` routes the ELL matvec through the Pallas `ell_spmv`
+    kernel (interpret mode off-TPU).  `multilevel=True` (default) seeds the
+    solve with a cascadic coarse-to-fine warm start (`multilevel_warm_start`)
+    when no explicit `warm` vector is given — the iterative solve then only
+    refines the prolonged coarse Fiedler vector.
+    """
     n = graph.n
     if n <= _DENSE_CUTOFF:
         vec, lam = _dense_fiedler(dense_laplacian_np(graph))
         return FiedlerResult(vec, lam, 0.0, 0, "dense")
+
+    ml_levels = 0
+    if warm is None and multilevel:
+        warm, ml_levels = multilevel_warm_start(graph)
+        if warm is not None and method == "inverse":
+            warm = _blend_noise(warm, seed)
 
     n_pad = next_pow2(n) if pad else n
     width = int(graph.degrees.max()) if graph.nnz else 1
@@ -163,14 +322,18 @@ def fiedler_from_graph(
         b0 = jnp.asarray(_noise_b0(seed, n_pad))
 
     if method == "lanczos":
+        # Pass the operator dataclass itself (a pytree): the window trace
+        # is shared across same-shape operators instead of per instance.
         y, info = lanczos_fiedler(
-            op.apply, n_pad, mask=mask, key=jax.random.PRNGKey(seed), b0=b0,
+            op, n_pad, mask=mask, key=jax.random.PRNGKey(seed), b0=b0,
             window=window, max_restarts=max_restarts, tol=tol,
         )
         iters = info.restarts
         lam, res = info.eigenvalue, info.residual
     elif method == "inverse":
         pre = amg_setup(graph, order=order)
+        ml_levels = max(ml_levels, len(pre.ops))
+
         # AMG hierarchy is sized to the real graph; wrap to ignore padding.
         def precond(r):
             u = pre(r[:n])
@@ -184,7 +347,8 @@ def fiedler_from_graph(
         lam, res = info.eigenvalue, info.residual
     else:
         raise ValueError(f"unknown fiedler method: {method}")
-    return FiedlerResult(np.asarray(y[:n]), lam, res, iters, method)
+    return FiedlerResult(np.asarray(y[:n]), lam, res, iters, method,
+                         levels=ml_levels)
 
 
 def fiedler_from_mesh(
@@ -199,20 +363,31 @@ def fiedler_from_mesh(
     window: int = 30,
     max_restarts: int = 50,
     pad: bool = True,
+    multilevel: bool = True,
 ) -> FiedlerResult:
     """Fiedler vector via the matrix-free gather-scatter Laplacian (paper §5).
 
     `graph_for_amg` (the assembled dual graph) is only needed for
     method="inverse" — the AMG hierarchy requires assembled coarse levels
-    (paper §7), while Lanczos runs fully matrix-free.
+    (paper §7), while Lanczos runs fully matrix-free.  `multilevel=True`
+    (default) assembles the dual graph on the host to build the cascadic
+    coarse-to-fine warm start when no `warm` vector is given; the device
+    solve itself stays matrix-free.
     """
     E = vert_gid.shape[0]
     if E <= _DENSE_CUTOFF:
-        from repro.mesh.graphs import dual_graph_from_incidence
-
         g = dual_graph_from_incidence(vert_gid, int(vert_gid.max()) + 1, E)
         vec, lam = _dense_fiedler(dense_laplacian_np(g))
         return FiedlerResult(vec, lam, 0.0, 0, "dense")
+
+    ml_levels = 0
+    if warm is None and multilevel:
+        g_ml = graph_for_amg
+        if g_ml is None:
+            g_ml = _graph_from_vert_gid(np.asarray(vert_gid))
+        warm, ml_levels = multilevel_warm_start(g_ml)
+        if warm is not None and method == "inverse":
+            warm = _blend_noise(warm, seed)
 
     n_pad = next_pow2(E) if pad else E
     op = _padded_gs_laplacian(vert_gid, n_pad)
@@ -224,7 +399,7 @@ def fiedler_from_mesh(
 
     if method == "lanczos":
         y, info = lanczos_fiedler(
-            op.apply, n_pad, mask=mask, key=jax.random.PRNGKey(seed), b0=b0,
+            op, n_pad, mask=mask, key=jax.random.PRNGKey(seed), b0=b0,
             window=window, max_restarts=max_restarts, tol=tol,
         )
         iters, lam, res = info.restarts, info.eigenvalue, info.residual
@@ -232,6 +407,7 @@ def fiedler_from_mesh(
         if graph_for_amg is None:
             raise ValueError("inverse iteration needs the assembled dual graph for AMG")
         pre = amg_setup(graph_for_amg, order=order)
+        ml_levels = max(ml_levels, len(pre.ops))
 
         def precond(r):
             u = pre(r[:E])
@@ -244,32 +420,15 @@ def fiedler_from_mesh(
         iters, lam, res = info.outer_iters, info.eigenvalue, info.residual
     else:
         raise ValueError(f"unknown fiedler method: {method}")
-    return FiedlerResult(np.asarray(y[:E]), lam, res, iters, method)
+    return FiedlerResult(np.asarray(y[:E]), lam, res, iters, method,
+                         levels=ml_levels)
 
 
 # ---------------------------------------------------------------------------
 # Batched (level-synchronous) entry points
 # ---------------------------------------------------------------------------
 
-def _padded_ell_laplacian_batched(
-    graphs: list, n_pad: int, width_pad: int, b_pad: int
-) -> EllLaplacian:
-    """Stack B assembled Laplacians into one (b_pad, n_pad, width_pad) ELL
-    operator.  Rows past each graph's n — and whole batch-padding rows —
-    have zero vals and zero diag, so L acts as 0 on them."""
-    C = np.tile(
-        np.arange(n_pad, dtype=np.int64)[None, :, None], (b_pad, 1, width_pad)
-    )
-    V = np.zeros((b_pad, n_pad, width_pad), dtype=np.float64)
-    D = np.zeros((b_pad, n_pad), dtype=np.float64)
-    for b, g in enumerate(graphs):
-        _fill_ell_block(g, C[b], V[b], D[b])
-    return EllLaplacian(
-        cols=jnp.asarray(C.astype(np.int32)),
-        vals=jnp.asarray(V.astype(np.float32)),
-        diag=jnp.asarray(D.astype(np.float32)),
-        n=n_pad,
-    )
+_padded_ell_laplacian_batched = ell_laplacian_batched
 
 
 def _padded_gs_laplacian_batched(
@@ -392,10 +551,22 @@ def _packed_b0(sizes, offs, N: int, seeds, warms) -> jax.Array:
 
 
 def _solve_inverse_buckets(results, solve_ix, size_of, bucket_key, build_op,
-                           seeds, warms, tol):
+                           seeds, warms, tol, *, graph_of=None,
+                           precond="jacobi"):
     """Shared method="inverse" tail for both batched entry points: group
-    problems into shape buckets, run the leading-batch-dim Jacobi solve per
-    bucket, unpack FiedlerResults in place."""
+    problems into shape buckets, run the leading-batch-dim preconditioned
+    solve per bucket, unpack FiedlerResults in place.
+
+    precond="jacobi" builds the preconditioner from each operator's own
+    diagonal; precond="amg" builds one packed `BatchedAMG` V-cycle per
+    bucket from the assembled graphs (`graph_of(i)` must be given — the
+    graph path hands over the input graphs, the mesh path assembles each
+    sub-mesh's dual graph on the host, exactly like the unbatched path's
+    `graph_for_amg`)."""
+    if precond not in ("jacobi", "amg"):
+        raise ValueError(f"unknown preconditioner: {precond}")
+    if precond == "amg" and graph_of is None:
+        raise ValueError("precond='amg' needs assembled graphs")
     buckets: dict = {}
     for i in solve_ix:
         buckets.setdefault(bucket_key(i), []).append(i)
@@ -403,6 +574,11 @@ def _solve_inverse_buckets(results, solve_ix, size_of, bucket_key, build_op,
         n_pad = key[0]
         b_pad = next_pow2(len(ix))
         op = build_op(ix, key, b_pad)
+        pre = None
+        pre_levels = 0
+        if precond == "amg":
+            pre = amg_setup_batched([graph_of(i) for i in ix], n_pad, b_pad)
+            pre_levels = len(pre.ops)
         mask = np.zeros((b_pad, n_pad), dtype=np.float32)
         for r, i in enumerate(ix):
             mask[r, : size_of(i)] = 1.0
@@ -411,13 +587,14 @@ def _solve_inverse_buckets(results, solve_ix, size_of, bucket_key, build_op,
             [warms[i] for i in ix], n_pad, b_pad,
         )
         Y, info = inverse_iteration_batched(
-            op, n_pad, mask=jnp.asarray(mask), b0=b0, tol=tol
+            op, n_pad, mask=jnp.asarray(mask), b0=b0, tol=tol, precond=pre
         )
         Yh = np.asarray(Y)
         for r, i in enumerate(ix):
             results[i] = FiedlerResult(
                 Yh[r, : size_of(i)], float(info.eigenvalue[r]),
                 float(info.residual[r]), int(info.outer_iters[r]), "inverse",
+                levels=pre_levels,
             )
 
 
@@ -450,6 +627,8 @@ def fiedler_from_graph_batched(
     pack_segs: int | None = None,
     width_pad: int | None = None,
     use_kernel: bool = False,
+    multilevel: bool = True,
+    precond: str = "jacobi",
 ) -> list:
     """Fiedler vectors of B independent graphs in one batched solve.
 
@@ -460,13 +639,16 @@ def fiedler_from_graph_batched(
     method="lanczos" packs all subproblems into one flat block-diagonal
     solve whose trace is keyed by (pack_slots, pack_segs, width_pad,
     window) — the RSB engine pins those to run-wide values so one trace
-    serves the whole run.  The packed operator is an ordinary 2-D ELL, so
-    `use_kernel=True` routes its matvec through the Pallas `ell_spmv`
-    kernel just like the unbatched path.  method="inverse" runs
-    Jacobi-preconditioned batched flexcg over leading-batch-dim operators
-    bucketed by (n_pad, width_pad); the AMG hierarchy is per-graph host
-    state and stays on the unbatched path (use_kernel does not apply to
-    the 3-D batched operators).
+    serves the whole run.  method="inverse" runs batched flexcg over
+    leading-batch-dim operators bucketed by (n_pad, width_pad), with
+    `precond="jacobi"` (the operator's own diagonal) or `precond="amg"`
+    (one packed `BatchedAMG` V-cycle per bucket — paper §7's
+    preconditioner, batched).  `use_kernel=True` routes BOTH layouts
+    through the Pallas `ell_spmv` kernel: the packed 2-D operator uses the
+    flat kernel and the 3-D leading-batch-dim operators use the batched
+    grid variant.  `multilevel=True` (default) fills every missing `warms`
+    entry with the cascadic coarse-to-fine warm start of
+    :func:`multilevel_warm_start`.
     """
     B = len(graphs)
     seeds, warms = _normalize_batch_args(B, seeds, warms)
@@ -480,6 +662,14 @@ def fiedler_from_graph_batched(
             solve_ix.append(i)
     if not solve_ix:
         return results
+
+    ml_levels = {i: 0 for i in solve_ix}
+    if multilevel:
+        for i in solve_ix:
+            if warms[i] is None:
+                warms[i], ml_levels[i] = multilevel_warm_start(graphs[i])
+                if warms[i] is not None and method == "inverse":
+                    warms[i] = _blend_noise(warms[i], seeds[i])
 
     if method == "lanczos":
         sizes = [graphs[i].n for i in solve_ix]
@@ -501,6 +691,7 @@ def fiedler_from_graph_batched(
         )
         for r, i in enumerate(solve_ix):
             results[i] = packed[r]
+            results[i].levels = ml_levels[i]
         return results
 
     if method != "inverse":
@@ -511,13 +702,20 @@ def fiedler_from_graph_batched(
         width = int(g.degrees.max()) if g.nnz else 1
         return (next_pow2(g.n), next_pow2(max(width, 2)))
 
-    _solve_inverse_buckets(
-        results, solve_ix, lambda i: graphs[i].n, bucket_key,
-        lambda ix, key, b_pad: _padded_ell_laplacian_batched(
+    def build_op(ix, key, b_pad):
+        op = _padded_ell_laplacian_batched(
             [graphs[i] for i in ix], key[0], key[1], b_pad
-        ),
-        seeds, warms, tol,
+        )
+        if use_kernel:
+            op = dataclasses.replace(op, use_kernel=True)
+        return op
+
+    _solve_inverse_buckets(
+        results, solve_ix, lambda i: graphs[i].n, bucket_key, build_op,
+        seeds, warms, tol, graph_of=lambda i: graphs[i], precond=precond,
     )
+    for i in solve_ix:  # deepest hierarchy used: warm start or AMG ladder
+        results[i].levels = max(results[i].levels, ml_levels[i])
     return results
 
 
@@ -532,27 +730,55 @@ def fiedler_from_mesh_batched(
     max_restarts: int = 50,
     pack_slots: int | None = None,
     pack_segs: int | None = None,
+    multilevel: bool = True,
+    precond: str = "jacobi",
+    graphs: list | None = None,
 ) -> list:
     """Matrix-free batched analogue of :func:`fiedler_from_mesh`: B element
     sub-meshes (their (E, K) global-id tables) per call.  method="lanczos"
     packs every sub-mesh into one flat gather-scatter solve (one trace per
     run when pack_slots/pack_segs are pinned); method="inverse" uses the
-    leading-batch-dim Jacobi path (AMG is per-graph host state)."""
+    leading-batch-dim path with `precond="jacobi"` or `precond="amg"` (a
+    packed `BatchedAMG` V-cycle over the assembled dual graphs — the fine
+    operator stays matrix-free gather-scatter, exactly like the unbatched
+    path's `graph_for_amg`).  `multilevel=True` (default) fills missing
+    `warms` entries with the cascadic coarse-to-fine warm start.
+
+    `graphs` optionally supplies each sub-mesh's assembled dual graph (the
+    batched `graph_for_amg` analogue): the RSB mesh engine extracts all of
+    a level's subgraphs in one vectorized pass, which is much cheaper than
+    re-assembling every problem here from its gid table.  Entries may be
+    None; anything missing is assembled on demand."""
     B = len(vert_gids)
     seeds, warms = _normalize_batch_args(B, seeds, warms)
+    graphs = [None] * B if graphs is None else list(graphs)
+    if len(graphs) != B:
+        raise ValueError("graphs must match the batch length")
+
+    def graph_of(i):
+        if graphs[i] is None:
+            graphs[i] = _graph_from_vert_gid(np.asarray(vert_gids[i]))
+        return graphs[i]
+
     results: list = [None] * B
     solve_ix = []
     for i, vg in enumerate(vert_gids):
         if vg.shape[0] <= _DENSE_CUTOFF:
-            from repro.mesh.graphs import dual_graph_from_incidence
-
-            g = dual_graph_from_incidence(vg, int(vg.max()) + 1, vg.shape[0])
-            vec, lam = _dense_fiedler(dense_laplacian_np(g))
+            vec, lam = _dense_fiedler(dense_laplacian_np(graph_of(i)))
             results[i] = FiedlerResult(vec, lam, 0.0, 0, "dense")
         else:
             solve_ix.append(i)
     if not solve_ix:
         return results
+
+    ml_levels = {i: 0 for i in solve_ix}
+
+    if multilevel:
+        for i in solve_ix:
+            if warms[i] is None:
+                warms[i], ml_levels[i] = multilevel_warm_start(graph_of(i))
+                if warms[i] is not None and method == "inverse":
+                    warms[i] = _blend_noise(warms[i], seeds[i])
 
     if method == "lanczos":
         sizes = [vert_gids[i].shape[0] for i in solve_ix]
@@ -565,6 +791,7 @@ def fiedler_from_mesh_batched(
         )
         for r, i in enumerate(solve_ix):
             results[i] = packed[r]
+            results[i].levels = ml_levels[i]
         return results
 
     if method != "inverse":
@@ -575,8 +802,10 @@ def fiedler_from_mesh_batched(
         lambda ix, key, b_pad: _padded_gs_laplacian_batched(
             [vert_gids[i] for i in ix], key[0], b_pad
         ),
-        seeds, warms, tol,
+        seeds, warms, tol, graph_of=graph_of, precond=precond,
     )
+    for i in solve_ix:  # deepest hierarchy used: warm start or AMG ladder
+        results[i].levels = max(results[i].levels, ml_levels[i])
     return results
 
 

@@ -17,12 +17,14 @@ each inner solve is a single jitted while_loop.
 
 **Batched variant** (`inverse_iteration_batched`): B subproblems (one RSB
 tree level) share a single jitted, per-element-masked flexcg inner solve.
-The AMG hierarchy is inherently per-graph (host-built, ragged), so the
-batched path uses the Jacobi preconditioner taken from the operator's own
-`diag` — the paper's smoother — applied per subproblem.  Both of the
-paper's outer-loop refinements survive batching: the augmented Krylov
-projection becomes a batched Gram solve, and the single-inner-iteration
-stopping signal is tracked per subproblem.
+The preconditioner is either Jacobi taken from the operator's own `diag`
+(the paper's smoother, the default) or a packed `BatchedAMG` V-cycle
+(`repro.core.amg.amg_setup_batched`) passed as a traced pytree argument —
+level ladders padded to shared power-of-two sizes, so one compiled trace
+serves every bucket of the same shape.  Both of the paper's outer-loop
+refinements survive batching: the augmented Krylov projection becomes a
+batched Gram solve, and the single-inner-iteration stopping signal is
+tracked per subproblem.
 """
 
 from __future__ import annotations
@@ -164,16 +166,18 @@ def _rayleigh_batched(Ly, y):
     return lam, res
 
 
-@partial(jax.jit, static_argnames=("jacobi", "inner_tol", "inner_maxiter"))
-def _batched_inner_solve(op, b, x0, mask, jacobi, inner_tol, inner_maxiter):
+@partial(jax.jit, static_argnames=("inner_tol", "inner_maxiter"))
+def _batched_inner_solve(op, precond, b, x0, mask, inner_tol, inner_maxiter):
     """One inner solve + renormalization + Rayleigh quotient, all batched.
 
-    `op` is a pytree operator (traced argument → one trace per shape
-    bucket).  With `jacobi=True` the preconditioner is built from the
-    operator's own diagonal (padding rows have diag 0 → identity there).
+    `op` and `precond` are pytree arguments (traced → one trace per shape
+    bucket and preconditioner structure).  `precond=None` falls back to
+    Jacobi built from the operator's own diagonal (padding rows have
+    diag 0 → identity there); a `BatchedAMG` (or any callable pytree)
+    is applied as the flexible preconditioner per subproblem.
     """
-    pre = None
-    if jacobi:
+    pre = precond
+    if pre is None:
         inv_d = jnp.where(op.diag > 0, 1.0 / jnp.maximum(op.diag, 1e-30), 0.0)
         pre = lambda r: r * inv_d  # noqa: E731
     result = flexcg(
@@ -224,6 +228,7 @@ def inverse_iteration_batched(
     *,
     mask: jax.Array,
     b0: jax.Array,
+    precond=None,
     max_outer: int = 30,
     inner_tol: float = 1e-4,
     inner_maxiter: int = 200,
@@ -233,7 +238,10 @@ def inverse_iteration_batched(
     """B inverse-iteration Fiedler solves in lockstep.
 
     Returns (B (B, n) iterates, per-problem info).  An all-zero mask row is
-    a batch-padding dummy that converges immediately.
+    a batch-padding dummy that converges immediately.  `precond` is a
+    callable pytree applied per subproblem inside the inner flexcg (e.g. a
+    `BatchedAMG` V-cycle); None selects the Jacobi preconditioner from the
+    operator's own diagonal.
     """
     B = mask.shape[0]
     b = _project_out_ones(b0.astype(jnp.float32), mask)
@@ -255,7 +263,7 @@ def inverse_iteration_batched(
         else:
             x0 = jnp.zeros_like(b)
         b_new, lam_new, res_new, iters, Ly_new = _batched_inner_solve(
-            op, b, x0, mask, True, inner_tol, inner_maxiter
+            op, precond, b, x0, mask, inner_tol, inner_maxiter
         )
         iters_h = np.asarray(iters)
         inner_counts.append(iters_h)

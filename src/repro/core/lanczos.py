@@ -57,8 +57,7 @@ class BatchedLanczosInfo:
     converged: np.ndarray    # (B,) bool
 
 
-@partial(jax.jit, static_argnums=(0, 3))
-def _lanczos_window(op, q0, mask, m):
+def _window_body(op, q0, mask, m):
     """One restart window: returns (Q (m,n), alpha (m,), beta (m,)).
 
     beta[j] is the subdiagonal linking step j to j+1 (beta[m-1] is the
@@ -89,6 +88,28 @@ def _lanczos_window(op, q0, mask, m):
     return Q, alpha, beta
 
 
+# Two jit forms of the window.  Operator dataclasses (EllLaplacian /
+# GSLaplacian — registered pytrees) go in as TRACED arguments: one compiled
+# trace serves every operator of the same shape, so the recursive engine no
+# longer retraces per tree node.  Plain callables (e.g. the deflated
+# closure in `fiedler_pair_from_graph`) fall back to the static form, one
+# trace per callable identity.
+_lanczos_window_pytree = partial(jax.jit, static_argnames=("m",))(_window_body)
+_lanczos_window = partial(jax.jit, static_argnums=(0, 3))(_window_body)
+
+
+@jax.jit
+def _apply_pytree_op(op, x):
+    """Module-level jitted matvec for pytree operators (shared cache)."""
+    return op(x)
+
+
+def _run_window(op, q, mask, m):
+    if dataclasses.is_dataclass(op):
+        return _lanczos_window_pytree(op, q, mask, m=m)
+    return _lanczos_window(op, q, mask, m)
+
+
 def _tridiag_eigh(alpha: jax.Array, beta: jax.Array):
     m = alpha.shape[0]
     T = jnp.diag(alpha) + jnp.diag(beta[:-1], 1) + jnp.diag(beta[:-1], -1)
@@ -116,14 +137,17 @@ def lanczos_fiedler(
     q = _project_out_ones(q, mask)
     q = q / jnp.maximum(jnp.linalg.norm(q), 1e-30)
 
-    opj = jax.jit(op)
+    if dataclasses.is_dataclass(op):
+        opj = partial(_apply_pytree_op, op)
+    else:
+        opj = jax.jit(op)
     theta = jnp.asarray(0.0)
     res = jnp.asarray(jnp.inf)
     y = q
     converged = False
     r = 0
     for r in range(1, max_restarts + 1):
-        Q, alpha, beta = _lanczos_window(op, q, mask, window)
+        Q, alpha, beta = _run_window(op, q, mask, window)
         evals, evecs = _tridiag_eigh(alpha, beta)
         s = evecs[:, 0]
         theta = evals[0]

@@ -5,7 +5,9 @@ The finest level of the paper's multigrid uses the gather-scatter Laplacian
 assembled form (paper §7: "we generate L₀, L₁, L₂, … as CSR matrices").  On
 TPU we store the padded **ELL** layout — static shape, row-contiguous,
 VMEM-tileable — and the matvec is the Pallas `ell_spmv` kernel with a pure
-jnp fallback.
+jnp fallback.  Both layouts are kernel-backed: 2-D (n, w) operators use the
+flat kernel, 3-D (B, n, w) leading-batch-dim operators (the level-synchronous
+engine's and the batched AMG's layout) use the batched grid variant.
 """
 
 from __future__ import annotations
@@ -45,6 +47,10 @@ class EllLaplacian:
 
     def adj_apply(self, x: jax.Array) -> jax.Array:
         if self.cols.ndim == 3:
+            if self.use_kernel:
+                from repro.kernels.ell_spmv import ops as _ops
+
+                return _ops.ell_spmv_batched(self.cols, self.vals, x)
             B = self.cols.shape[0]
             taken = jnp.take_along_axis(
                 x, self.cols.reshape(B, -1), axis=-1
@@ -68,6 +74,44 @@ jax.tree_util.register_dataclass(
     data_fields=("cols", "vals", "diag"),
     meta_fields=("n", "use_kernel"),
 )
+
+
+def fill_ell_block(graph: Graph, C: np.ndarray, V: np.ndarray, D: np.ndarray,
+                   col_offset: int = 0) -> None:
+    """Fill one graph's rows of a padded ELL block (C/V/D are views of the
+    target rows; rows past graph.n keep self-columns and zero vals/diag,
+    so L acts as 0 on them).  The single home of the padding invariants —
+    the padded, batched, and packed builders all delegate here."""
+    cols, vals = csr_to_ell(graph, max_row=None)
+    nb, wb = cols.shape
+    if wb > C.shape[1]:
+        raise ValueError("width_pad below max degree")
+    C[:nb, :wb] = cols + col_offset
+    V[:nb, :wb] = vals
+    np.add.at(D[:nb], graph.rows, graph.weights)
+
+
+def ell_laplacian_batched(
+    graphs: list, n_pad: int, width_pad: int, b_pad: int,
+    *, use_kernel: bool = False,
+) -> EllLaplacian:
+    """Stack B assembled Laplacians into one (b_pad, n_pad, width_pad) ELL
+    operator.  Rows past each graph's n — and whole batch-padding rows —
+    have zero vals and zero diag, so L acts as 0 on them."""
+    C = np.tile(
+        np.arange(n_pad, dtype=np.int64)[None, :, None], (b_pad, 1, width_pad)
+    )
+    V = np.zeros((b_pad, n_pad, width_pad), dtype=np.float64)
+    D = np.zeros((b_pad, n_pad), dtype=np.float64)
+    for b, g in enumerate(graphs):
+        fill_ell_block(g, C[b], V[b], D[b])
+    return EllLaplacian(
+        cols=jnp.asarray(C.astype(np.int32)),
+        vals=jnp.asarray(V.astype(np.float32)),
+        diag=jnp.asarray(D.astype(np.float32)),
+        n=n_pad,
+        use_kernel=use_kernel,
+    )
 
 
 def ell_laplacian(graph: Graph, *, use_kernel: bool = False) -> EllLaplacian:

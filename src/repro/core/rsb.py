@@ -26,6 +26,14 @@ hardware-saturating batched matvecs into wall-clock wins, and the level
 structure is exactly what `repro.dist` needs to later shard levels across
 devices.
 
+**Multilevel acceleration** (default on): every Fiedler solve runs
+coarse-to-fine.  A Galerkin hierarchy per subproblem (host-built, the
+`amg_setup` pairwise aggregation over the RCB ordering) is solved densely
+at the coarsest level and prolonged cascadically to seed the device solve,
+which is capped at `fine_restarts` refinement restarts over a shallower
+Lanczos window; method="inverse" can additionally swap the Jacobi inner
+preconditioner for the packed `BatchedAMG` V-cycle (`precond="amg"`).
+
 **engine="recursive"** — the host-side depth-first recursion (one jitted
 solve per tree node), kept for parity testing and as the AMG-preconditioned
 inverse-iteration reference (AMG hierarchies are per-graph host state).
@@ -48,7 +56,6 @@ from repro.core.fiedler import (
     fiedler_from_graph,
     fiedler_from_graph_batched,
     fiedler_from_mesh,
-    fiedler_from_mesh_batched,
     next_pow2,
 )
 from repro.core.rcb import rcb_order, rib_order
@@ -67,6 +74,7 @@ class BisectionRecord:
     eigenvalue: float
     residual: float
     seconds: float
+    levels: int = 0    # multilevel hierarchy depth (warm start or AMG); 0 = none
 
 
 @dataclasses.dataclass
@@ -89,10 +97,19 @@ class RSBReport:
     seconds: float
     levels: list = dataclasses.field(default_factory=list)
     engine: str = "recursive"
+    pre: str = "none"          # geometric pre-partitioning used ("rcb"/"rib")
+    precond: str = "none"      # inverse-iteration preconditioner ("jacobi"/"amg")
+    multilevel: bool = False   # coarse-to-fine warm starts active
 
     @property
     def total_iterations(self) -> int:
         return sum(r.iterations for r in self.records)
+
+    @property
+    def precond_levels(self) -> int:
+        """Deepest multilevel hierarchy used by any solve (warm-start
+        Galerkin ladder for Lanczos, AMG ladder for inverse iteration)."""
+        return max((r.levels for r in self.records), default=0)
 
 
 def _node_seed(seed: int, level: int, p_lo: int) -> int:
@@ -153,6 +170,31 @@ def _levels_from_records(records: list) -> list:
 # Mesh drivers
 # ---------------------------------------------------------------------------
 
+def _resolve_solver_opts(window, max_restarts, multilevel, fine_restarts,
+                         ordered):
+    """Multilevel solves are *refinements* of the prolonged coarse Fiedler
+    vector: a shallower Lanczos window (cheaper restarts AND a cheaper
+    compiled trace) capped at a few restarts replaces the deep cold-start
+    windows.  An explicit `window` always wins.
+
+    The cap is only safe when the cascadic warm start is actually in play
+    AND the geometric pre-ordering applied (`ordered`): pairwise
+    aggregation follows the node order, so without RCB/RIB locality the
+    hierarchy — and hence the warm start — is weaker, and a capped
+    refinement would freeze a poorer bisection.  Unordered runs (and runs
+    whose warm start comes from elsewhere — callers pass ordered=False)
+    keep the multilevel seeding but solve to tolerance.  The one remaining
+    capped-without-warm-start case is a per-problem
+    `multilevel_warm_start` numerical-breakdown fallback to noise inside a
+    packed solve (the cap is per call, not per problem) — rare enough that
+    the balanced-but-coarser bisection it risks is accepted."""
+    if window is None:
+        window = 20 if multilevel else 30
+    if multilevel and ordered and fine_restarts is not None:
+        max_restarts = min(max_restarts, fine_restarts)
+    return window, max_restarts
+
+
 def rsb_partition_mesh(
     mesh,
     nparts: int,
@@ -161,34 +203,64 @@ def rsb_partition_mesh(
     laplacian: str = "weighted",
     pre: str | None = "rcb",
     tol: float = 1e-3,
-    window: int = 30,
+    window: int | None = None,
     max_restarts: int = 50,
     seed: int = 0,
     warm_start: bool = False,
     engine: str = "batched",
+    multilevel: bool = True,
+    fine_restarts: int | None = 3,
+    precond: str = "jacobi",
 ) -> tuple[np.ndarray, RSBReport]:
     """Partition a HexMesh into `nparts` via RSB on its dual graph.
 
-    engine="batched" solves every bisection of a tree level in one vmapped
-    Fiedler solve per shape bucket; engine="recursive" is the sequential
-    per-node reference (and the only path with AMG-preconditioned inverse
-    iteration).  warm_start=True (beyond-paper) seeds the Fiedler solve
-    with the centroid coordinate along the subset's longest axis — an
-    excellent initial guess on mesh-like graphs that cuts Lanczos restarts.
+    engine="batched" (default) solves every bisection of a tree level in
+    one vmapped Fiedler solve per shape bucket; engine="recursive" is the
+    sequential per-node reference.
+
+    multilevel=True (default) runs every Fiedler solve coarse-to-fine: a
+    Galerkin hierarchy per subproblem, a dense coarsest solve, a cascadic
+    prolongation as the warm start, and the device solve capped at
+    `fine_restarts` refinement restarts with a shallower default window
+    (see `_resolve_solver_opts`).  `window=None` resolves to 20 under
+    multilevel, 30 otherwise.
+
+    `laplacian` is validated but currently a NO-OP: both settings
+    partition the shared-vertex-weighted dual graph (the paper's ω
+    weights); a genuinely unweighted operator is future work, so the
+    benchmark rows labelled weighted/unweighted differ only in cache
+    warmth.
+
+    method="inverse" selects `precond`: "jacobi" (the batched default) or
+    "amg" — the packed `BatchedAMG` V-cycle (paper §7) over
+    leading-batch-dim operators.  The recursive engine always uses the
+    per-graph host-built AMG hierarchy (the reference implementation).
+
+    warm_start=True (beyond-paper) instead seeds the Fiedler solve with
+    the centroid coordinate along the subset's longest axis; explicit warm
+    starts take precedence over the multilevel ones.
     """
     if laplacian not in ("weighted", "unweighted"):
         raise ValueError(laplacian)
     if engine not in _ENGINES:
         raise ValueError(f"unknown engine: {engine}")
+    window, max_restarts = _resolve_solver_opts(
+        window, max_restarts, multilevel, fine_restarts,
+        # warm_start=True replaces the cascadic warm start with the
+        # geometric one — keep the pre-existing uncapped schedule there.
+        ordered=pre in ("rcb", "rib") and not warm_start,
+    )
     kw = dict(method=method, pre=pre, tol=tol, window=window,
-              max_restarts=max_restarts, seed=seed, warm_start=warm_start)
+              max_restarts=max_restarts, seed=seed, warm_start=warm_start,
+              multilevel=multilevel, precond=precond)
     if engine == "batched":
         return _rsb_mesh_batched(mesh, nparts, **kw)
     return _rsb_mesh_recursive(mesh, nparts, **kw)
 
 
 def _rsb_mesh_recursive(
-    mesh, nparts, *, method, pre, tol, window, max_restarts, seed, warm_start
+    mesh, nparts, *, method, pre, tol, window, max_restarts, seed, warm_start,
+    multilevel, precond,
 ) -> tuple[np.ndarray, RSBReport]:
     records: list[BisectionRecord] = []
     parts = np.zeros(mesh.nelems, dtype=np.int64)
@@ -218,13 +290,13 @@ def _rsb_mesh_recursive(
         res = fiedler_from_mesh(
             sub_vg, method=method, graph_for_amg=graph_amg, order=order_amg,
             seed=_node_seed(seed, level, p_lo), tol=tol, window=window,
-            max_restarts=max_restarts, warm=warm,
+            max_restarts=max_restarts, warm=warm, multilevel=multilevel,
         )
         dt = time.perf_counter() - t
         records.append(BisectionRecord(
             level=level, size=int(idx.size), nparts=np_here, method=res.method,
             iterations=res.iterations, eigenvalue=res.eigenvalue,
-            residual=res.residual, seconds=dt,
+            residual=res.residual, seconds=dt, levels=res.levels,
         ))
         n_left = np_here // 2
         lo, hi = _proportional_split(res.vector, mesh.weights[idx], n_left, np_here)
@@ -235,83 +307,33 @@ def _rsb_mesh_recursive(
     return parts, RSBReport(
         records=records, seconds=time.perf_counter() - t0,
         levels=_levels_from_records(records), engine="recursive",
+        pre=pre or "none", precond="amg" if method == "inverse" else "none",
+        multilevel=multilevel,
     )
 
 
 def _rsb_mesh_batched(
-    mesh, nparts, *, method, pre, tol, window, max_restarts, seed, warm_start
+    mesh, nparts, *, method, pre, tol, window, max_restarts, seed, warm_start,
+    multilevel, precond,
 ) -> tuple[np.ndarray, RSBReport]:
-    records: list[BisectionRecord] = []
-    levels: list[LevelRecord] = []
-    parts = np.zeros(mesh.nelems, dtype=np.int64)
-    t0 = time.perf_counter()
+    """Level-synchronous mesh driver: delegate to the graph engine on the
+    assembled dual graph.
 
-    # Run-wide shape-bucket pins: a level's subproblems partition the root
-    # set, so their padded blocks always fit the root's padded size — one
-    # compiled trace serves every level (and every same-shape run).
-    pack_slots = next_pow2(max(mesh.nelems, 2))
-    pack_segs = next_pow2(max(nparts, 1))
-
-    active = [(np.arange(mesh.nelems, dtype=np.int64), 0, nparts)]
-    level = 0
-    while active:
-        solve_nodes = []
-        for idx, p_lo, p_hi in active:
-            if p_hi - p_lo <= 1 or idx.size <= 1:
-                parts[idx] = p_lo
-                continue
-            if pre in ("rcb", "rib"):
-                fn = rcb_order if pre == "rcb" else rib_order
-                idx = idx[fn(mesh.coords[idx], mesh.weights[idx])]
-            solve_nodes.append((idx, p_lo, p_hi))
-        if not solve_nodes:
-            break
-
-        t_solve = time.perf_counter()
-        results = fiedler_from_mesh_batched(
-            [mesh.vert_gid[idx] for idx, _, _ in solve_nodes],
-            method=method,
-            seeds=[_node_seed(seed, level, p_lo) for _, p_lo, _ in solve_nodes],
-            warms=[
-                _warm_vector(mesh.coords[idx]) if warm_start else None
-                for idx, _, _ in solve_nodes
-            ],
-            tol=tol, window=window, max_restarts=max_restarts,
-            pack_slots=pack_slots, pack_segs=pack_segs,
-        )
-        solve_dt = time.perf_counter() - t_solve
-
-        t_split = time.perf_counter()
-        next_active = []
-        for (idx, p_lo, p_hi), res in zip(solve_nodes, results):
-            np_here = p_hi - p_lo
-            records.append(BisectionRecord(
-                level=level, size=int(idx.size), nparts=np_here,
-                method=res.method, iterations=res.iterations,
-                eigenvalue=res.eigenvalue, residual=res.residual,
-                seconds=solve_dt / len(solve_nodes),
-            ))
-            n_left = np_here // 2
-            lo, hi = _proportional_split(
-                res.vector, mesh.weights[idx], n_left, np_here
-            )
-            next_active.append((idx[lo], p_lo, p_lo + n_left))
-            next_active.append((idx[hi], p_lo + n_left, p_hi))
-        levels.append(LevelRecord(
-            level=level,
-            n_nodes=len(solve_nodes),
-            total_size=sum(int(idx.size) for idx, _, _ in solve_nodes),
-            buckets=_size_buckets([int(idx.size) for idx, _, _ in solve_nodes]),
-            iterations=sum(r.iterations for r in results),
-            solve_seconds=solve_dt,
-            split_seconds=time.perf_counter() - t_split,
-        ))
-        active = next_active
-        level += 1
-
-    return parts, RSBReport(
-        records=records, seconds=time.perf_counter() - t0,
-        levels=levels, engine="batched",
+    The multilevel pipeline (coarse-to-fine warm starts, batched AMG,
+    dense tails) runs on assembled graphs, and the engine keeps every
+    level's subgraphs current with one vectorized multi-subgraph
+    extraction — so the assembled ELL operators come for free, their
+    packed solve shares ONE compiled trace with every graph-path run of
+    the same shape, and their matvecs are ~2× cheaper than the packed
+    gather-scatter form on small subproblems.  The matrix-free
+    gather-scatter solve (paper §5) remains the recursive mesh engine's
+    and `fiedler_from_mesh_batched`'s path."""
+    graph = dual_graph_from_incidence(mesh.vert_gid, mesh.n_vert, mesh.nelems)
+    return _rsb_graph_batched(
+        graph, nparts, coords=mesh.coords, weights=mesh.weights,
+        method=method, pre=pre, tol=tol, window=window,
+        max_restarts=max_restarts, seed=seed, warm_start=warm_start,
+        use_kernel=False, multilevel=multilevel, precond=precond,
     )
 
 
@@ -328,17 +350,29 @@ def rsb_partition_graph(
     method: str = "lanczos",
     pre: str | None = "rcb",
     tol: float = 1e-3,
-    window: int = 30,
+    window: int | None = None,
     max_restarts: int = 50,
     seed: int = 0,
     warm_start: bool = False,
     use_kernel: bool = False,
     engine: str = "batched",
+    multilevel: bool = True,
+    fine_restarts: int | None = 3,
+    precond: str = "jacobi",
 ) -> tuple[np.ndarray, RSBReport]:
     """Partition a generic graph (assembled ELL Laplacian) via RSB.
 
-    `pre` defaults to "rcb" to match the mesh path (paper §8's geometric
-    pre-partitioning); it is a no-op when `coords` is not given.
+    `pre` selects the GEOMETRIC pre-partitioning pass ("rcb"/"rib"/None —
+    paper §8), not a preconditioner; it defaults to "rcb" to match the
+    mesh path and is a no-op when `coords` is not given.  The
+    inverse-iteration preconditioner is `precond` ("jacobi" or "amg"),
+    and `multilevel`/`fine_restarts`/`window` control the coarse-to-fine
+    solver schedule exactly as in :func:`rsb_partition_mesh`.
+
+    `use_kernel=True` routes every assembled ELL matvec through the Pallas
+    `ell_spmv` kernel — both the packed 2-D Lanczos operator and the 3-D
+    leading-batch-dim inverse-iteration operators (the batched grid
+    kernel variant).
 
     This is the entry point the framework's partition-aware GNN sharding
     uses: feed the returned `parts` to
@@ -346,14 +380,20 @@ def rsb_partition_graph(
     halo plan whose all_gather volume is proportional to this cut.
 
     warm_start=True seeds each node's Fiedler solve from `coords` (the
-    centroid coordinate along the subset's longest axis), matching the mesh
-    path's ≈2× restart reduction; it is a no-op without coords.
+    centroid coordinate along the subset's longest axis); it is a no-op
+    without coords, and it takes precedence over the multilevel warm start.
     """
     if engine not in _ENGINES:
         raise ValueError(f"unknown engine: {engine}")
+    window, max_restarts = _resolve_solver_opts(
+        window, max_restarts, multilevel, fine_restarts,
+        ordered=(pre in ("rcb", "rib") and coords is not None
+                 and not warm_start),
+    )
     kw = dict(coords=coords, weights=weights, method=method, pre=pre, tol=tol,
               window=window, max_restarts=max_restarts, seed=seed,
-              warm_start=warm_start, use_kernel=use_kernel)
+              warm_start=warm_start, use_kernel=use_kernel,
+              multilevel=multilevel, precond=precond)
     if engine == "batched":
         return _rsb_graph_batched(graph, nparts, **kw)
     return _rsb_graph_recursive(graph, nparts, **kw)
@@ -361,7 +401,7 @@ def rsb_partition_graph(
 
 def _rsb_graph_recursive(
     graph, nparts, *, coords, weights, method, pre, tol, window, max_restarts,
-    seed, warm_start, use_kernel,
+    seed, warm_start, use_kernel, multilevel, precond,
 ) -> tuple[np.ndarray, RSBReport]:
     n = graph.n
     w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
@@ -386,13 +426,13 @@ def _rsb_graph_recursive(
         res = fiedler_from_graph(
             g, method=method, order=None, seed=_node_seed(seed, level, p_lo),
             warm=warm, tol=tol, window=window, max_restarts=max_restarts,
-            use_kernel=use_kernel,
+            use_kernel=use_kernel, multilevel=multilevel,
         )
         dt = time.perf_counter() - t
         records.append(BisectionRecord(
             level=level, size=int(idx.size), nparts=np_here, method=res.method,
             iterations=res.iterations, eigenvalue=res.eigenvalue,
-            residual=res.residual, seconds=dt,
+            residual=res.residual, seconds=dt, levels=res.levels,
         ))
         n_left = np_here // 2
         lo, hi = _proportional_split(res.vector, w[idx], n_left, np_here)
@@ -403,12 +443,14 @@ def _rsb_graph_recursive(
     return parts, RSBReport(
         records=records, seconds=time.perf_counter() - t0,
         levels=_levels_from_records(records), engine="recursive",
+        pre=pre or "none", precond="amg" if method == "inverse" else "none",
+        multilevel=multilevel,
     )
 
 
 def _rsb_graph_batched(
     graph, nparts, *, coords, weights, method, pre, tol, window, max_restarts,
-    seed, warm_start, use_kernel,
+    seed, warm_start, use_kernel, multilevel, precond,
 ) -> tuple[np.ndarray, RSBReport]:
     n = graph.n
     w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
@@ -453,7 +495,7 @@ def _rsb_graph_batched(
             ],
             tol=tol, window=window, max_restarts=max_restarts,
             pack_slots=pack_slots, pack_segs=pack_segs, width_pad=width_pad,
-            use_kernel=use_kernel,
+            use_kernel=use_kernel, multilevel=multilevel, precond=precond,
         )
         solve_dt = time.perf_counter() - t_solve
 
@@ -465,7 +507,7 @@ def _rsb_graph_batched(
                 level=level, size=int(idx.size), nparts=np_here,
                 method=res.method, iterations=res.iterations,
                 eigenvalue=res.eigenvalue, residual=res.residual,
-                seconds=solve_dt / len(solve_nodes),
+                seconds=solve_dt / len(solve_nodes), levels=res.levels,
             ))
             n_left = np_here // 2
             lo, hi = _proportional_split(res.vector, w[idx], n_left, np_here)
@@ -488,7 +530,9 @@ def _rsb_graph_batched(
 
     return parts, RSBReport(
         records=records, seconds=time.perf_counter() - t0,
-        levels=levels, engine="batched",
+        levels=levels, engine="batched", pre=pre or "none",
+        precond=precond if method == "inverse" else "none",
+        multilevel=multilevel,
     )
 
 

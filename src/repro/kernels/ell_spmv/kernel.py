@@ -12,6 +12,14 @@ a v5e core); rows are streamed block-by-block.
 Grid: n / block_n column blocks.  Block shapes: (w, block_n) for cols/vals,
 (block_n,) for the output; x is broadcast (un-blocked) into VMEM once.
 block_n is a multiple of 128 (lane width); w is the padded max degree.
+
+**Batched variant** (`ell_spmv_batched_pallas`): B independent operators —
+the level-synchronous RSB engine's leading-batch-dim layout and the packed
+`BatchedAMG` level operators — add a leading batch grid dimension.  Each
+(b, i) grid step loads problem b's resident vector plus one (w, block_n)
+column block and writes one (block_n,) output block; column ids stay
+per-problem (no cross-batch offsets), matching the jnp fallback in
+`EllLaplacian.adj_apply`.
 """
 
 from __future__ import annotations
@@ -55,5 +63,41 @@ def ell_spmv_pallas(
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x, cols_t, vals_t)
+
+
+def _spmv_batched_kernel(x_ref, cols_ref, vals_ref, out_ref):
+    x = x_ref[0]                       # (n,) problem b's resident vector
+    cols = cols_ref[0]                 # (w, bn)
+    vals = vals_ref[0]                 # (w, bn)
+    gathered = jnp.take(x, cols, axis=0)          # (w, bn) vectorized gather
+    out_ref[0, :] = (vals.astype(jnp.float32) * gathered.astype(jnp.float32)).sum(
+        axis=0
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def ell_spmv_batched_pallas(
+    cols_t: jax.Array,    # (B, w, n) int32 — per-problem column ids
+    vals_t: jax.Array,    # (B, w, n)
+    x: jax.Array,         # (B, n)
+    *,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    B, w, n = cols_t.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (B, n // block_n)
+    return pl.pallas_call(
+        _spmv_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n), lambda b, i: (b, 0)),            # x row b
+            pl.BlockSpec((1, w, block_n), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, w, block_n), lambda b, i: (b, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, n), x.dtype),
         interpret=interpret,
     )(x, cols_t, vals_t)

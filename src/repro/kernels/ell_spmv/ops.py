@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ell_spmv.kernel import ell_spmv_pallas
+from repro.kernels.ell_spmv.kernel import ell_spmv_batched_pallas, ell_spmv_pallas
 
 
 def _on_tpu() -> bool:
@@ -36,6 +36,29 @@ def ell_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
         )
         return out[:n]
     return ell_spmv_pallas(cols.T, vals.T, x, block_n=block, interpret=not _on_tpu())
+
+
+def ell_spmv_batched(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
+    """B independent A·x products with row-major ELL inputs (B, n, w) and
+    per-problem vectors (B, n) — transposes to (B, w, n) ELLPACK-T and
+    dispatches to the batched-grid Pallas kernel (interpret mode off-TPU),
+    padding n to a lane-aligned block size."""
+    B, n, w = cols.shape
+    block = _pick_block(n)
+    if block == 0:
+        n_pad = -(-n // 128) * 128
+        cols = jnp.pad(cols, ((0, 0), (0, n_pad - n), (0, 0)))
+        vals = jnp.pad(vals, ((0, 0), (0, n_pad - n), (0, 0)))
+        xp = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+        out = ell_spmv_batched_pallas(
+            cols.swapaxes(-1, -2), vals.swapaxes(-1, -2), xp,
+            block_n=128, interpret=not _on_tpu(),
+        )
+        return out[:, :n]
+    return ell_spmv_batched_pallas(
+        cols.swapaxes(-1, -2), vals.swapaxes(-1, -2), x,
+        block_n=block, interpret=not _on_tpu(),
+    )
 
 
 def lap_apply(cols: jax.Array, vals: jax.Array, diag: jax.Array, x: jax.Array):

@@ -13,6 +13,19 @@ def ell_spmv_ref(cols_t: jnp.ndarray, vals_t: jnp.ndarray, x: jnp.ndarray) -> jn
     return (vals_t * jnp.take(x, cols_t, axis=0)).sum(axis=0)
 
 
+def ell_spmv_batched_ref(cols_t: jnp.ndarray, vals_t: jnp.ndarray,
+                         x: jnp.ndarray) -> jnp.ndarray:
+    """Batched oracle: cols_t/vals_t (B, w, n); x (B, n).
+
+    out[b, i] = Σ_k vals_t[b, k, i] · x[b, cols_t[b, k, i]]
+    """
+    B = cols_t.shape[0]
+    taken = jnp.take_along_axis(
+        x, cols_t.reshape(B, -1), axis=-1
+    ).reshape(cols_t.shape)
+    return (vals_t * taken).sum(axis=1)
+
+
 def lap_apply_ref(cols_t, vals_t, diag, x):
     """L·x = diag ⊙ x − A·x."""
     return diag * x - ell_spmv_ref(cols_t, vals_t, x)

@@ -107,7 +107,12 @@ def test_batched_graph_entry_matches_unbatched_on_singleton():
 
 
 def test_batched_mesh_entry_matches_unbatched_on_singleton():
-    m = box_mesh(8, 8, 4)
+    # 8×6×4: all axes distinct → simple λ₂.  A square cross-section (8×8×4)
+    # has an exactly degenerate λ₂ eigenspace whose orientation inside the
+    # Ritz problem is set by fp noise — the two entry points then return
+    # different (both valid) members and a vector comparison is
+    # meaningless (paper §9).
+    m = box_mesh(8, 6, 4)
     r1 = fiedler_from_mesh(m.vert_gid, method="lanczos", seed=3, tol=1e-3)
     rb = fiedler_from_mesh_batched([m.vert_gid], seeds=[3], tol=1e-3)[0]
     assert rb.eigenvalue == pytest.approx(r1.eigenvalue, rel=1e-3)
@@ -140,11 +145,17 @@ def test_batched_inverse_entry_matches_oracle():
 def test_inverse_gram_breakdown_regression(dims):
     """Regression: near-duplicate projection-window iterates made the fp32
     Gram singular (the old absolute 1e-12 ridge is below fp32 epsilon) and
-    NaN vectors were reported as converged — in BOTH inverse paths."""
+    NaN vectors were reported as converged — in BOTH inverse paths.
+
+    multilevel=False pins the original cold-noise-start scenario the ridge
+    regression was observed under; the multilevel path is covered by
+    test_multilevel.py (near-degenerate pairs converge to an eigenvector
+    of the low cluster, not necessarily y₂ — paper §9)."""
     g = grid_graph_2d(*dims)
     lam, _ = fiedler_oracle_np(g)
-    rb = fiedler_from_graph_batched([g], method="inverse", tol=1e-4)[0]
-    ru = fiedler_from_graph(g, method="inverse", tol=1e-4)
+    rb = fiedler_from_graph_batched([g], method="inverse", tol=1e-4,
+                                    multilevel=False)[0]
+    ru = fiedler_from_graph(g, method="inverse", tol=1e-4, multilevel=False)
     for r in (rb, ru):
         assert np.isfinite(r.vector).all()
         # loose eigenvalue check: the guarded early stop may accept a
@@ -195,12 +206,14 @@ def test_sibling_seeds_differ():
 
 def test_graph_warm_start_plumbed(pebble):
     """warm_start on the graph path matches the mesh path's behaviour:
-    no more restarts than cold, same balance."""
+    no more restarts than a cold noise start, same balance.  The cold
+    reference disables the multilevel warm start (which is itself a warm
+    start and would beat the geometric one — see test_multilevel.py)."""
     m, g = pebble
     _, rep_cold = rsb_partition_graph(g, 8, coords=m.coords, tol=1e-3,
-                                      warm_start=False)
+                                      warm_start=False, multilevel=False)
     p_warm, rep_warm = rsb_partition_graph(g, 8, coords=m.coords, tol=1e-3,
-                                           warm_start=True)
+                                           warm_start=True, multilevel=False)
     assert rep_warm.total_iterations <= rep_cold.total_iterations
     counts = np.bincount(p_warm, minlength=8)
     assert counts.max() - counts.min() <= 1
