@@ -4,6 +4,13 @@ level-synchronous batched engine vs the recursive per-node reference), and
 for the batched inverse path with BOTH preconditioners (Jacobi vs the
 packed multilevel AMG V-cycle).
 
+Every combination runs the full partition pipeline ONCE and emits TWO
+rows: `refine="none"` (the raw bisection labels, from the pipeline's
+`parts_raw` — no second solve) and `refine="repair+refine"` (the default
+post stage).  Rows carry `disconnected` and `post_seconds`, so the CI
+smoke gate can assert the refine invariants (refined cut ≤ raw cut, zero
+disconnected parts, bounded post wall-clock) per combination.
+
 Validates:
   C2 — RCB pre-partitioning speeds up RSB (here: wall time on CPU AND the
        mechanism metric, gather-scatter locality — boundary/halo size),
@@ -20,17 +27,15 @@ counts, iteration counts, relative speedups) are the comparable quantities.
 a small mesh, batched engine, both solver families and both inverse
 preconditioners — fast enough for every push.  Its edge cut AND its total
 wall clock are gated against the checked-in BENCH_partition.json baseline;
-rows are matched on (engine, method, pre, precond).
+rows are matched on (engine, method, pre, precond, refine).
 """
 
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.bench_util import emit
-from repro.core import partition_metrics, rsb_partition_mesh
+from repro.core import PartitionPipeline, partition_metrics
 from repro.dist.partition_aware import plan_halo_sharding
 from repro.mesh import dual_graph, pebble_mesh
 
@@ -54,6 +59,41 @@ def run(
     graph = dual_graph(mesh)
     emit_prefix = "partition_time_smoke" if smoke else "partition_time"
     rows = []
+
+    def record(parts, seconds, *, engine, method, pre, report, refine,
+               post_seconds=0.0):
+        pm = partition_metrics(graph, parts, nparts, weights=mesh.weights)
+        halo = plan_halo_sharding(graph, parts, nparts).halo
+        rows.append({
+            "engine": engine,
+            "method": method, "pre": pre or "none",
+            "precond": report.precond,
+            "precond_levels": report.precond_levels,
+            "refine": refine, "post_seconds": post_seconds,
+            "seconds": seconds, "iters": report.total_iterations,
+            "levels": len(report.levels),
+            "cut": pm.edge_cut,
+            "max_nbrs": pm.max_neighbors,
+            "avg_nbrs": pm.avg_neighbors,
+            "imbalance": pm.imbalance,
+            "w_imb": pm.weighted_imbalance,
+            "volume": pm.total_volume,
+            "halo": halo,
+            "disconnected": pm.disconnected_parts,
+        })
+        emit(
+            f"{emit_prefix}/{engine}/{method}/pre={pre or 'none'}"
+            f"/precond={report.precond}/refine={refine}",
+            seconds * 1e6,
+            f"E={mesh.nelems};P={nparts};"
+            f"iters={report.total_iterations};"
+            f"mlv={report.precond_levels};"
+            f"cut={pm.edge_cut:.0f};max_nbrs={pm.max_neighbors};"
+            f"avg_nbrs={pm.avg_neighbors:.1f};"
+            f"w_imb={pm.weighted_imbalance:.3f};halo={halo};"
+            f"disc={pm.disconnected_parts}",
+        )
+
     for engine in engines:
         for method in methods:
             # The batched inverse path carries the Jacobi-vs-multilevel
@@ -66,41 +106,21 @@ def run(
                 preconds = ("jacobi",)
             for precond in preconds:
                 for pre in (None, "rcb"):
+                    pipe = PartitionPipeline(
+                        pre=pre or "none", bisect=f"rsb-{engine}",
+                        bisect_kw=dict(method=method, tol=1e-3,
+                                       precond=precond),
+                    )
                     t0 = time.perf_counter()
-                    parts, report = rsb_partition_mesh(
-                        mesh, nparts, method=method, pre=pre, tol=1e-3,
-                        engine=engine, precond=precond,
-                    )
+                    ctx = pipe.run(mesh, nparts)
                     dt = time.perf_counter() - t0
-                    pm = partition_metrics(graph, parts, nparts,
-                                           weights=mesh.weights)
-                    halo = plan_halo_sharding(graph, parts, nparts).halo
-                    rows.append({
-                        "engine": engine,
-                        "method": method, "pre": pre or "none",
-                        "precond": report.precond,
-                        "precond_levels": report.precond_levels,
-                        "seconds": dt, "iters": report.total_iterations,
-                        "levels": len(report.levels),
-                        "cut": pm.edge_cut,
-                        "max_nbrs": pm.max_neighbors,
-                        "avg_nbrs": pm.avg_neighbors,
-                        "imbalance": pm.imbalance,
-                        "w_imb": pm.weighted_imbalance,
-                        "volume": pm.total_volume,
-                        "halo": halo,
-                    })
-                    emit(
-                        f"{emit_prefix}/{engine}/{method}/pre={pre or 'none'}"
-                        f"/precond={report.precond}",
-                        dt * 1e6,
-                        f"E={mesh.nelems};P={nparts};"
-                        f"iters={report.total_iterations};"
-                        f"mlv={report.precond_levels};"
-                        f"cut={pm.edge_cut:.0f};max_nbrs={pm.max_neighbors};"
-                        f"avg_nbrs={pm.avg_neighbors:.1f};"
-                        f"w_imb={pm.weighted_imbalance:.3f};halo={halo}",
-                    )
+                    post_dt = ctx.report.post.seconds
+                    record(ctx.parts_raw, dt - post_dt, engine=engine,
+                           method=method, pre=pre, report=ctx.report,
+                           refine="none")
+                    record(ctx.parts, dt, engine=engine, method=method,
+                           pre=pre, report=ctx.report,
+                           refine="repair+refine", post_seconds=post_dt)
     return rows
 
 

@@ -4,6 +4,13 @@ random, on a warped pebble-bed mesh where geometry misleads axis-aligned
 cuts.  Validates C3 (quality) and C6 (weighted ≥ unweighted on volume).
 Also reports the halo size each partition induces in the framework's
 partition-aware GNN sharding — the paper-technique → framework bridge.
+
+RSB rows run the full partition pipeline (pre → bisect → repair/refine
+post stage) and carry a `refine` axis: `rsb_weighted_raw` is the identical
+bisection with the post stage stripped (recorded from the pipeline's
+`parts_raw`, no second solve), so the raw-vs-refined gap is the post
+stage's recovered quality.  Every row records `disconnected` parts and the
+post stage's wall clock.
 """
 
 from __future__ import annotations
@@ -13,7 +20,7 @@ import time
 import numpy as np
 
 from benchmarks.bench_util import emit
-from repro.core import partition, partition_metrics, rsb_partition_mesh
+from repro.core import PartitionPipeline, partition, partition_metrics
 from repro.dist.partition_aware import plan_halo_sharding
 from repro.mesh import dual_graph, pebble_mesh
 
@@ -25,14 +32,17 @@ def run(dims=(12, 12, 12), nparts=16, full: bool = False) -> list:
     graph = dual_graph(mesh)
     rows = []
 
-    def record(name, parts, dt, engine="-", report=None):
+    def record(name, parts, dt, engine="-", report=None, refine="none",
+               post_seconds=0.0):
         pm = partition_metrics(graph, parts, nparts)
         halo = plan_halo_sharding(graph, parts, nparts).halo
         row = {"name": name, "engine": engine, "seconds": dt,
+               "refine": refine, "post_seconds": post_seconds,
                "cut": pm.edge_cut,
                "volume": pm.total_volume, "max_nbrs": pm.max_neighbors,
                "avg_nbrs": pm.avg_neighbors, "halo": halo,
-               "imbalance": pm.imbalance}
+               "imbalance": pm.imbalance,
+               "disconnected": pm.disconnected_parts}
         if report is not None:
             # Solver provenance: geometric pre-pass, preconditioner family,
             # multilevel hierarchy depth, and total iteration count.
@@ -48,21 +58,32 @@ def run(dims=(12, 12, 12), nparts=16, full: bool = False) -> list:
         emit(
             f"quality/{name}", dt * 1e6,
             f"cut={pm.edge_cut:.0f};volume={pm.total_volume:.0f};"
-            f"max_nbrs={pm.max_neighbors};halo={halo};imb={pm.imbalance}"
+            f"max_nbrs={pm.max_neighbors};halo={halo};imb={pm.imbalance};"
+            f"disc={pm.disconnected_parts};refine={refine}"
             + extra,
         )
 
-    # RSB rows carry the engine comparison: the level-synchronous batched
-    # engine (default) vs the recursive per-node reference, same settings.
+    # RSB rows carry the engine comparison (level-synchronous batched
+    # engine vs the recursive per-node reference) and, on the batched
+    # weighted run, the refine axis (raw labels vs the full pipeline).
     for engine in ("batched", "recursive"):
         for lap in ("weighted", "unweighted"):
-            t0 = time.perf_counter()
-            parts, report = rsb_partition_mesh(
-                mesh, nparts, laplacian=lap, tol=1e-3, engine=engine,
+            pipe = PartitionPipeline(
+                bisect=f"rsb-{engine}",
+                bisect_kw=dict(laplacian=lap, tol=1e-3),
             )
+            t0 = time.perf_counter()
+            ctx = pipe.run(mesh, nparts)
+            dt = time.perf_counter() - t0
             suffix = "" if engine == "batched" else "_recursive"
-            record(f"rsb_{lap}{suffix}", parts, time.perf_counter() - t0,
-                   engine=engine, report=report)
+            record(f"rsb_{lap}{suffix}", ctx.parts, dt, engine=engine,
+                   report=ctx.report, refine="repair+refine",
+                   post_seconds=ctx.report.post.seconds)
+            if engine == "batched" and lap == "weighted":
+                # Same bisection, post stage stripped: parts_raw is free.
+                record("rsb_weighted_raw", ctx.parts_raw,
+                       dt - ctx.report.post.seconds, engine=engine,
+                       report=ctx.report, refine="none")
     for name in ("rcb", "rib", "sfc", "random"):
         t0 = time.perf_counter()
         parts = partition(mesh, nparts, partitioner=name)

@@ -2,7 +2,13 @@
 (exit 1) if, against the checked-in BENCH_partition.json baseline,
 
   * any row's RSB edge cut regresses more than 10%, or
-  * the config's TOTAL wall clock regresses more than 25%.
+  * the config's TOTAL wall clock regresses more than 25%,
+
+or if the refine-stage invariants fail WITHIN the current run:
+
+  * a refined row's cut exceeds its raw (refine="none") sibling's, or
+  * a refined row reports disconnected parts, or
+  * the post stage's summed wall clock exceeds 15% of the summed total.
 
     PYTHONPATH=src python -m benchmarks.smoke_check [--baseline PATH]
 
@@ -10,17 +16,25 @@ The smoke config (benchmarks/partition_time.py, smoke=True) is the batched
 engine, BOTH solver families (lanczos and inverse — inverse-iteration
 regressions would be invisible to a lanczos-only gate), both inverse
 preconditioners (jacobi and the packed multilevel AMG), pre ∈ {none, rcb}
-on a small pebble mesh — fast enough for every push.  Cut is gated per row
-(quality regressions are the silent failure mode of solver refactors);
-wall clock is gated on the summed config only, with generous headroom,
-because per-row timings are too noisy on shared CI runners but a >25%
-total blowup means iteration counts exploded or a hot path fell off its
-fast route.  The wall measurement is the config's SECOND in-process run:
-the first run pays the XLA compiles (which vary wildly across runners and
-are warm in the checked-in baseline, whose smoke rows run at the end of
-the full `benchmarks.run --json` process), the second isolates the
-algorithmic time both sides can compare.  Rows are matched on
-(engine, method, pre, precond).
+on a small pebble mesh — fast enough for every push.  Each combination
+emits a refine="none" row (raw bisection labels) and a refined row from
+ONE solve; rows are matched on (engine, method, pre, precond, refine).
+Cut is gated per row (quality regressions are the silent failure mode of
+solver refactors); wall clock is gated on the summed config only, with
+generous headroom, because per-row timings are too noisy on shared CI
+runners but a >25% total blowup means iteration counts exploded or a hot
+path fell off its fast route.  The wall measurement is the MIN of three
+warm in-process runs after one cold run (the cold run pays the XLA
+compiles, which vary wildly across runners; the min-of-3 warm sum is the
+box's reproducible algorithmic time — single runs on this class of runner
+swing ±25-40%).  The checked-in baseline is measured under IDENTICAL
+conditions: `benchmarks.run --json` runs the smoke config in a fresh
+subprocess (cold, then warm) three times and keeps the repetition with
+the minimal summed wall, so both sides of the gate estimate the same
+quantity with the same estimator and the headroom covers regressions,
+not measurement noise.
+The summed wall clock counts each solve once (refined rows only when the
+refine axis is present).
 """
 
 from __future__ import annotations
@@ -33,12 +47,52 @@ from benchmarks import partition_time
 
 TOLERANCE = 1.10       # per-row: fail if cut > 110% of baseline
 WALL_TOLERANCE = 1.25  # total: fail if summed seconds > 125% of baseline
+POST_FRACTION = 0.15   # post stage wall clock ≤ 15% of the summed total
 
 
 def _key(row) -> tuple:
-    # Older baselines predate the precond column; default to jacobi.
+    # Older baselines predate the precond/refine columns; default to the
+    # values the old rows actually measured (jacobi, raw labels).
     return (row["engine"], row["method"], row["pre"],
-            row.get("precond", "jacobi"))
+            row.get("precond", "jacobi"), row.get("refine", "none"))
+
+
+def _wall_rows(rows) -> list:
+    """Rows whose seconds sum to the config's wall clock, counting each
+    solve once: refined rows when the refine axis exists, else all."""
+    refined = [r for r in rows if r.get("refine", "none") != "none"]
+    return refined or list(rows)
+
+
+def check_refine_invariants(rows, warm_rows=None) -> list:
+    """The post-stage contract, asserted within one run: refined cut never
+    above raw cut, zero disconnected parts, bounded post wall clock.
+    Cut/connectivity come from ``rows`` (deterministic, so the cold run is
+    fine); the post-fraction check uses ``warm_rows`` — cold totals are
+    dominated by XLA compiles and would make a 15%-of-total bound
+    near-vacuous.  Returns failure messages (empty = pass)."""
+    failures = []
+    raw = {_key(r)[:4]: r for r in rows if r.get("refine", "none") == "none"}
+    refined = [r for r in rows if r.get("refine", "none") != "none"]
+    for r in refined:
+        base = raw.get(_key(r)[:4])
+        if base is not None and r["cut"] > base["cut"] + 1e-9:
+            failures.append(
+                f"refined cut {r['cut']:.0f} > raw {base['cut']:.0f} "
+                f"for {_key(r)[:4]}")
+        if r.get("disconnected", 0) != 0:
+            failures.append(
+                f"{r['disconnected']} disconnected part(s) after refine "
+                f"for {_key(r)[:4]}")
+    timed = [r for r in (rows if warm_rows is None else warm_rows)
+             if r.get("refine", "none") != "none"]
+    total = sum(r["seconds"] for r in timed)
+    post = sum(r.get("post_seconds", 0.0) for r in timed)
+    if timed and total > 0 and post > POST_FRACTION * total:
+        failures.append(
+            f"post stage {post:.3f}s exceeds {POST_FRACTION:.0%} of "
+            f"total {total:.3f}s")
+    return failures
 
 
 def main() -> int:
@@ -55,7 +109,12 @@ def main() -> int:
         return 1
 
     rows = partition_time.run(smoke=True)        # cold: gates the cut
-    rows_warm = partition_time.run(smoke=True)   # warm: gates the wall clock
+    # warm: min-of-3 summed wall clock (same estimator as the baseline);
+    # the min-sum run's rows also feed the post-fraction invariant
+    warm_runs = [partition_time.run(smoke=True) for _ in range(3)]
+    warm = min(warm_runs,
+               key=lambda rs: sum(r["seconds"] for r in _wall_rows(rs)))
+    wall = sum(r["seconds"] for r in _wall_rows(warm))
     by_key = {_key(r): r for r in rows}
     failed = False
     for base in base_rows:
@@ -72,8 +131,11 @@ def main() -> int:
         if ratio > TOLERANCE:
             failed = True
 
-    base_wall = sum(r["seconds"] for r in base_rows)
-    wall = sum(r["seconds"] for r in rows_warm)
+    for msg in check_refine_invariants(rows, warm):
+        print(f"REFINE-GATE {msg}", file=sys.stderr)
+        failed = True
+
+    base_wall = sum(r["seconds"] for r in _wall_rows(base_rows))
     if base_wall > 0:
         ratio = wall / base_wall
         status = "OK" if ratio <= WALL_TOLERANCE else "REGRESSION"

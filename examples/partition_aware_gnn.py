@@ -13,7 +13,7 @@ import jax
 import numpy as np
 from jax.sharding import AxisType
 
-from repro.core import partition_metrics, rsb_partition_graph
+from repro.core import PartitionPipeline, partition_metrics
 from repro.core.rcb import rcb_parts
 from repro.dist.partition_aware import (adjacency_matvec_distributed,
                                         plan_halo_sharding)
@@ -25,16 +25,27 @@ coords = np.stack(np.meshgrid(np.arange(32), np.arange(32), indexing="ij"),
                   -1).reshape(-1, 2).astype(float)
 coords = np.concatenate([coords, np.zeros((g.n, 1))], 1)
 
+# The full parRSB pipeline: per-level RCB reorder → batched spectral
+# bisection → component repair + FM boundary smoothing.  The context it
+# returns (labels + report with post-stage metrics) feeds the halo planner
+# directly.
+ctx = PartitionPipeline(bisect_kw=dict(tol=1e-4)).run(
+    g, n_shards, coords=coords)
+post = ctx.report.post
 print(f"graph: {g.n} nodes, {g.nnz // 2} edges, {n_shards} shards")
+print(f"rsb post stage: {post.fragments_repaired} fragments repaired, "
+      f"{post.moves_applied} boundary moves, "
+      f"cut {post.cut_before:.0f} -> {post.cut_after:.0f}")
 print(f"{'partitioner':<12}{'edge cut':>9}{'halo':>6}{'gather words/col':>18}")
 plans = {}
 for name, parts in (
     ("random", np.random.default_rng(0).permutation(np.arange(g.n) % n_shards)),
     ("rcb", rcb_parts(coords, n_shards)),
-    ("rsb", rsb_partition_graph(g, n_shards, tol=1e-4)[0]),
+    ("rsb", ctx),   # pipeline context: plan_halo_sharding takes it whole
 ):
     plan = plan_halo_sharding(g, parts, n_shards)
-    pm = partition_metrics(g, parts, n_shards)
+    pm = partition_metrics(g, parts if isinstance(parts, np.ndarray)
+                           else ctx.parts, n_shards)
     plans[name] = plan
     print(f"{name:<12}{pm.edge_cut:>9.0f}{plan.halo:>6}"
           f"{plan.collective_words_per_feature:>18}")

@@ -6,7 +6,7 @@ partitioners compared (RSB / RCB / RIB / SFC / random).
 
 import numpy as np
 
-from repro.core import partition, partition_metrics
+from repro.core import PartitionPipeline, partition, partition_metrics
 from repro.dist.partition_aware import plan_halo_sharding, scatter_features
 from repro.mesh import dual_graph, pebble_mesh
 
@@ -15,18 +15,26 @@ graph = dual_graph(mesh)
 nparts = 16
 print(f"pebble-bed-like mesh: {mesh.nelems} elements "
       f"({(mesh.weights > 1).sum()} 'flow' elements at 2x weight)")
-print(f"{'method':<12}{'cut':>8}{'volume':>9}{'maxnbr':>7}{'halo':>6}{'w-imb':>7}")
-for name in ("rsb", "rcb", "rib", "sfc", "random"):
-    parts = partition(mesh, nparts, partitioner=name)
+print(f"{'method':<12}{'cut':>8}{'volume':>9}{'maxnbr':>7}{'halo':>6}"
+      f"{'w-imb':>7}{'disc':>6}")
+# ONE pipeline run yields both rsb rows: "rsb" is the full pipeline
+# (repair + FM refinement on by default), "rsb_raw" its parts_raw — the
+# same bisection before the post stage, so the gap between the rows is
+# exactly the quality the post stage recovers.
+ctx = PartitionPipeline().run(mesh, nparts)
+rows = [("rsb", ctx.parts), ("rsb_raw", ctx.parts_raw)]
+rows += [(name, partition(mesh, nparts, partitioner=name))
+         for name in ("rcb", "rib", "sfc", "random")]
+for name, parts in rows:
     pm = partition_metrics(graph, parts, nparts, weights=mesh.weights)
     halo = plan_halo_sharding(graph, parts, nparts).halo
     print(f"{name:<12}{pm.edge_cut:>8.0f}{pm.total_volume:>9.0f}"
-          f"{pm.max_neighbors:>7}{halo:>6}{pm.weighted_imbalance:>7.3f}")
+          f"{pm.max_neighbors:>7}{halo:>6}{pm.weighted_imbalance:>7.3f}"
+          f"{pm.disconnected_parts:>6}")
 
 # element redistribution: permute element data into per-rank blocks — this
 # is the 'apply the partition' step a solver performs before timestepping
-parts = partition(mesh, nparts, partitioner="rsb")
-plan = plan_halo_sharding(graph, parts, nparts)
+plan = plan_halo_sharding(graph, ctx)
 blocks = scatter_features(plan, mesh.coords)
 print(f"\nredistributed coords into {blocks.shape} per-rank blocks "
       f"(halo capacity {plan.halo} elements/rank)")

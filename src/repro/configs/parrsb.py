@@ -1,7 +1,9 @@
 """The paper's own workload: parRSB partitioning configurations.
 
 Mesh-size / processor-count grids mirroring the paper's experiments,
-scaled to this container (benchmarks extrapolate; see EXPERIMENTS.md).
+scaled to this container (benchmarks extrapolate; see EXPERIMENTS.md),
+plus the named partition-pipeline presets the front door and benchmarks
+compose from (pre → bisect → post; see ``repro.core.pipeline``).
 """
 
 from __future__ import annotations
@@ -22,6 +24,10 @@ class ParRSBConfig:
     lanczos_window: int = 30
     max_restarts: int = 50
     tol: float = 1e-3
+    # Post-bisection quality stage (repair + FM boundary refinement)
+    refine_sweeps: int = 4
+    balance_tol: float = 0.05
+    pipeline: str = "default"
 
 
 def make_config() -> ParRSBConfig:
@@ -32,3 +38,52 @@ def make_smoke_config() -> ParRSBConfig:
     return ParRSBConfig(name="parrsb-smoke", pebble_dims=(8, 8, 8),
                         pebble_pebbles=3, quality_parts=(4,),
                         weak_e_per_p=64, weak_parts=(4, 8))
+
+
+# ---------------------------------------------------------------------------
+# Pipeline presets: named (pre, bisect, post) compositions
+# ---------------------------------------------------------------------------
+
+PIPELINE_PRESETS: dict = {
+    # The parRSB shape: per-level RCB reorder, batched spectral bisection,
+    # repair + FM smoothing.  What `partition()` runs by default.
+    "default": dict(pre="rcb", bisect="rsb-batched",
+                    post=("repair", "refine")),
+    # Raw bisection labels (PR 3 behaviour) — parity baselines, debugging.
+    "raw": dict(pre="rcb", bisect="rsb-batched", post=()),
+    # Quality-first: inertial per-level reorder, deeper FM schedule.
+    "quality": dict(pre="rib", bisect="rsb-batched",
+                    post=("repair", "refine"),
+                    post_kw=dict(sweeps=8, balance_tol=0.03)),
+    # Geometry-only fast path: RCB labels healed by the post stage — no
+    # eigensolves at all (Kong et al.'s point: the repair/balance stage is
+    # where the cheap-bisector pipelines earn their keep).
+    "geometric": dict(pre="none", bisect="rcb", post=("repair", "refine")),
+    # Recursive reference engine, refined — parity testing at full quality.
+    "reference": dict(pre="rcb", bisect="rsb-recursive",
+                      post=("repair", "refine")),
+}
+
+
+def make_pipeline(preset: str | None = None, *,
+                  config: ParRSBConfig | None = None, **overrides):
+    """Build a :class:`~repro.core.pipeline.PartitionPipeline` from a named
+    preset.  The config supplies the base post-stage knobs
+    (``refine_sweeps``/``balance_tol``) and the default preset name
+    (``pipeline``); preset-specific ``post_kw`` overrides them and keyword
+    overrides win over both (`post_kw` merges, other fields replace)."""
+    from repro.core.pipeline import PartitionPipeline
+
+    cfg = make_config() if config is None else config
+    preset = cfg.pipeline if preset is None else preset
+    if preset not in PIPELINE_PRESETS:
+        raise ValueError(
+            f"unknown pipeline preset: {preset!r} "
+            f"(have {tuple(PIPELINE_PRESETS)})")
+    spec = {k: (dict(v) if isinstance(v, dict) else v)
+            for k, v in PIPELINE_PRESETS[preset].items()}
+    post_kw = dict(sweeps=cfg.refine_sweeps, balance_tol=cfg.balance_tol)
+    post_kw.update(spec.pop("post_kw", {}))
+    post_kw.update(overrides.pop("post_kw", {}))
+    spec.update(overrides)
+    return PartitionPipeline(post_kw=post_kw, **spec)

@@ -34,9 +34,26 @@ from repro.core.fiedler import (fiedler_from_graph, fiedler_from_mesh, FiedlerRe
 from repro.core.rsb import (
     rsb_partition_mesh,
     rsb_partition_graph,
-    partition,
     RSBReport,
     LevelRecord,
     BisectionRecord,
+)
+from repro.core.refine import (
+    PostStats,
+    SweepRecord,
+    edge_cut,
+    refine_boundary,
+    refine_stage,
+    repair_components,
+    repair_refine,
+)
+from repro.core.pipeline import (
+    PartitionContext,
+    PartitionPipeline,
+    StageRecord,
+    partition,
+    parse_refine,
+    register_bisect_stage,
+    register_post_stage,
 )
 from repro.core.metrics import partition_metrics, PartitionMetrics, comm_time_model, m2_words

@@ -14,7 +14,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.mesh.graphs import Graph
+from repro.mesh.graphs import Graph, connected_labels
 
 
 @dataclasses.dataclass
@@ -28,6 +28,8 @@ class PartitionMetrics:
     total_volume: float         # Σ_p outgoing volume (ω words)
     avg_message_size: float     # mean over parts of volume_p / neighbors_p
     max_message_size: float
+    disconnected_parts: int = 0  # parts whose induced subgraph is not connected
+    component_count: int = 0     # Σ_p components of part p's induced subgraph
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -73,6 +75,16 @@ def partition_metrics(
     words = volume / 4.0 * dofs_per_face
     msg = np.where(neighbors > 0, words / np.maximum(neighbors, 1), 0.0)
 
+    # Connectivity census: components of each part's induced subgraph.
+    # Intra-part edges only, so no component spans parts and the per-part
+    # component counts sum to the number of distinct global labels.
+    intra = ~cut_mask
+    comp = connected_labels(graph.n, rows[intra], cols[intra])
+    comps_per_part = np.zeros(nparts, dtype=np.int64)
+    if graph.n:
+        pair = np.unique(parts * np.int64(comp.max() + 1) + comp)
+        np.add.at(comps_per_part, (pair // np.int64(comp.max() + 1)), 1)
+
     return PartitionMetrics(
         nparts=nparts,
         imbalance=int(counts.max() - counts.min()),
@@ -83,6 +95,8 @@ def partition_metrics(
         total_volume=float(volume.sum()),
         avg_message_size=float(msg[neighbors > 0].mean()) if cut_mask.any() else 0.0,
         max_message_size=float(msg.max()) if cut_mask.any() else 0.0,
+        disconnected_parts=int((comps_per_part > 1).sum()),
+        component_count=int(comps_per_part.sum()),
     )
 
 

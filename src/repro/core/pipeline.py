@@ -1,0 +1,474 @@
+"""Composable partition pipeline: pre → bisect → post.
+
+parRSB's quality claims rest on a *pipeline*, not on raw bisection labels:
+geometric pre-partitioning, spectral bisection on the dual graph, then
+post-processing that repairs disconnected parts and smooths boundaries.
+This module turns that shape into the front door of the partitioning
+stack:
+
+* :class:`PartitionPipeline` — three stage slots.
+  - ``pre``    ∈ {"rcb", "rib", "sfc", "none"}.  For spectral bisect
+    stages, "rcb"/"rib" select the *per-level* geometric reordering the
+    RSB drivers apply at every tree node (paper §8 — threaded through as
+    the drivers' ``pre=``, because the reorder must follow the recursion);
+    "sfc" applies ONE global space-filling-curve permutation up front (the
+    ordering bootstrap for the order-following multilevel hierarchy).
+    Geometric bisect stages are their own geometry and ignore ``pre``.
+  - ``bisect`` ∈ {"rsb-batched", "rsb-recursive", "rcb", "rib", "sfc",
+    "random"} — a registered stage producing the labels (the geometric
+    partitioners are ordinary stages here, not special cases).
+  - ``post``   — an ordered tuple of registered refiners, by default
+    ``("repair", "refine")``: connected-component repair then greedy
+    weighted FM boundary sweeps (:mod:`repro.core.refine`), both
+    cut-non-increasing.  The "refine" stage closes with a repair pass so
+    the zero-disconnected-parts invariant survives articulation moves.
+
+* :class:`PartitionContext` — what flows through the stages: the
+  mesh/graph, coords, weights, the evolving ``parts``, the
+  :class:`~repro.core.rsb.RSBReport` (whose ``post`` section the post
+  stages fill in), and one :class:`StageRecord` per stage with wall-clock
+  and stage-specific info.  Consumers that want more than labels
+  (``plan_halo_sharding``, the benchmark tables, the smoke gate) take the
+  context itself.
+
+* :func:`partition` — the compatibility front door `rsb.partition`
+  forwards to.  It builds a pipeline from the classic keyword surface
+  (``partitioner=``, ``engine=``, plus the new ``refine=`` escape hatch,
+  default on for RSB) and returns only the label array.  Stage kwargs are
+  routed explicitly and unknown keys raise — ``sfc_parts`` no longer
+  silently drops ``curve``/``bits``.
+
+Adding a quality optimization is now "register a stage", not "grow the
+driver": see ``register_post_stage`` and the README's stage contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import time
+
+import numpy as np
+
+from repro.core.refine import PostStats, refine_stage, repair_components
+from repro.core.rsb import RSBReport, rsb_partition_graph, rsb_partition_mesh
+from repro.mesh.graphs import Graph, dual_graph_from_incidence
+
+
+@dataclasses.dataclass
+class StageRecord:
+    """One executed stage: where the wall-clock went and what it did."""
+
+    kind: str          # "pre" | "bisect" | "post"
+    name: str
+    seconds: float
+    info: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class PartitionContext:
+    """State threaded through the pipeline stages."""
+
+    nparts: int
+    mesh: object | None = None          # HexMesh input (None for graphs)
+    graph: Graph | None = None          # dual graph (built lazily for meshes)
+    coords: np.ndarray | None = None
+    weights: np.ndarray | None = None
+    parts: np.ndarray | None = None     # current labels (post stages mutate)
+    parts_raw: np.ndarray | None = None  # bisect output, before any post stage
+    report: RSBReport | None = None
+    stages: list = dataclasses.field(default_factory=list)  # [StageRecord]
+
+    @property
+    def n(self) -> int:
+        return self.mesh.nelems if self.mesh is not None else self.graph.n
+
+    def require_graph(self) -> Graph:
+        """The dual graph — assembled on first use for mesh inputs."""
+        if self.graph is None:
+            m = self.mesh
+            self.graph = dual_graph_from_incidence(m.vert_gid, m.n_vert,
+                                                   m.nelems)
+        return self.graph
+
+    def stage_seconds(self, kind: str | None = None) -> float:
+        return sum(s.seconds for s in self.stages
+                   if kind is None or s.kind == kind)
+
+    @property
+    def seconds(self) -> float:
+        return self.stage_seconds()
+
+    def stats(self) -> dict:
+        """JSON-able run summary (benchmark rows, experiment records)."""
+        out = {
+            "nparts": self.nparts,
+            "n": self.n,
+            "seconds": self.seconds,
+            "stages": [
+                {"kind": s.kind, "name": s.name, "seconds": s.seconds,
+                 **s.info}
+                for s in self.stages
+            ],
+        }
+        if self.report is not None and self.report.post is not None:
+            out["post"] = self.report.post.row()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Stage registries
+# ---------------------------------------------------------------------------
+
+PRE_STAGES = ("rcb", "rib", "sfc", "none")
+
+_BISECT_STAGES: dict = {}
+_POST_STAGES: dict = {}
+
+
+def register_bisect_stage(name: str, fn) -> None:
+    """Register ``fn(ctx, pre, **kw) -> (parts, RSBReport | None)``.
+
+    ``pre`` is the pipeline's pre-stage hint ("rcb"/"rib"/None) for stages
+    that thread a per-level reordering; geometric stages may ignore it.
+    """
+    _BISECT_STAGES[name] = fn
+
+
+def register_post_stage(name: str, fn) -> None:
+    """Register ``fn(graph, parts, nparts, *, weights=None, ...) ->
+    (parts, PostStats)``.  The stage must be cut-non-increasing and must
+    not change the label domain ``0..nparts-1``.  The pipeline's
+    ``post_kw`` is filtered against the stage's signature (declare the
+    keywords you consume — e.g. "repair" takes ``balance_tol`` but not
+    ``sweeps``; a ``**kw`` catch-all receives everything)."""
+    _POST_STAGES[name] = fn
+
+
+def bisect_stage_names() -> tuple:
+    return tuple(sorted(_BISECT_STAGES))
+
+
+def post_stage_names() -> tuple:
+    return tuple(sorted(_POST_STAGES))
+
+
+def _rsb_stage(engine):
+    def stage(ctx: PartitionContext, pre, **kw):
+        if ctx.mesh is not None:
+            if engine == "batched":
+                # The batched mesh driver only assembles the dual graph and
+                # delegates to the graph driver; assembling through the
+                # context instead builds the graph ONCE per run — the post
+                # stages (and any metrics consumer) reuse it.
+                laplacian = kw.pop("laplacian", "weighted")
+                if laplacian not in ("weighted", "unweighted"):
+                    raise ValueError(laplacian)
+                return rsb_partition_graph(
+                    ctx.require_graph(), ctx.nparts, coords=ctx.coords,
+                    weights=ctx.weights, pre=pre, engine=engine, **kw)
+            # The recursive mesh driver reads coords/weights off the mesh;
+            # honor caller overrides by handing it an overridden copy so
+            # both engines balance the same weights.
+            mesh = ctx.mesh
+            if ctx.coords is not mesh.coords or ctx.weights is not mesh.weights:
+                mesh = dataclasses.replace(
+                    mesh, coords=np.asarray(ctx.coords, np.float64),
+                    weights=np.asarray(ctx.weights, np.float64))
+            return rsb_partition_mesh(mesh, ctx.nparts, pre=pre,
+                                      engine=engine, **kw)
+        return rsb_partition_graph(ctx.require_graph(), ctx.nparts,
+                                   coords=ctx.coords, weights=ctx.weights,
+                                   pre=pre, engine=engine, **kw)
+    return stage
+
+
+def _geometric_stage(fn):
+    def stage(ctx: PartitionContext, pre, **kw):
+        if ctx.coords is None:
+            raise ValueError("geometric bisect stages need coords")
+        return fn(ctx.coords, ctx.nparts, ctx.weights, **kw), None
+    return stage
+
+
+def _random_stage(ctx: PartitionContext, pre, *, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return rng.permutation(np.arange(ctx.n) % ctx.nparts), None
+
+
+def _stage_kw(fn, post_kw: dict) -> dict:
+    """Filter ``post_kw`` to the keywords ``fn``'s signature accepts
+    (everything passes through a ``**kw`` catch-all)."""
+    params = inspect.signature(fn).parameters
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return dict(post_kw)
+    return {k: v for k, v in post_kw.items() if k in params}
+
+
+def _register_builtin_stages() -> None:
+    from repro.core.rcb import rcb_parts, rib_parts
+    from repro.core.sfc import sfc_parts
+
+    register_bisect_stage("rsb-batched", _rsb_stage("batched"))
+    register_bisect_stage("rsb-recursive", _rsb_stage("recursive"))
+    register_bisect_stage("rcb", _geometric_stage(
+        lambda c, p, w, **kw: rcb_parts(c, p, w, **kw)))
+    register_bisect_stage("rib", _geometric_stage(
+        lambda c, p, w, **kw: rib_parts(c, p, w, **kw)))
+    register_bisect_stage("sfc", _geometric_stage(
+        lambda c, p, w, **kw: sfc_parts(c, p, w, **kw)))
+    register_bisect_stage("random", _random_stage)
+    # The refine.py functions ARE the stages (their signatures declare the
+    # keywords each consumes; refine_stage closes with a repair pass so the
+    # zero-disconnected invariant survives FM articulation moves).
+    register_post_stage("repair", repair_components)
+    register_post_stage("refine", refine_stage)
+
+
+_register_builtin_stages()
+
+
+# ---------------------------------------------------------------------------
+# The pipeline
+# ---------------------------------------------------------------------------
+
+def _make_context(obj, nparts, coords, weights) -> PartitionContext:
+    is_mesh = hasattr(obj, "vert_gid")
+    if is_mesh:
+        c = obj.coords if coords is None else coords
+        w = obj.weights if weights is None else weights
+        return PartitionContext(nparts=nparts, mesh=obj, coords=c, weights=w)
+    return PartitionContext(nparts=nparts, graph=obj, coords=coords,
+                            weights=weights)
+
+
+def _permuted_input(ctx: PartitionContext, order: np.ndarray):
+    """A new context whose input is reordered by ``order`` (pre="sfc"),
+    carrying any caller coords/weights overrides along."""
+    if ctx.mesh is not None:
+        mesh = ctx.mesh.take(order)
+        if (ctx.coords is not ctx.mesh.coords
+                or ctx.weights is not ctx.mesh.weights):
+            mesh = dataclasses.replace(
+                mesh, coords=np.asarray(ctx.coords, np.float64)[order],
+                weights=np.asarray(ctx.weights, np.float64)[order])
+        return PartitionContext(nparts=ctx.nparts, mesh=mesh,
+                                coords=mesh.coords, weights=mesh.weights)
+    return PartitionContext(
+        nparts=ctx.nparts, graph=ctx.graph.sub(order),
+        coords=None if ctx.coords is None else ctx.coords[order],
+        weights=None if ctx.weights is None else ctx.weights[order],
+    )
+
+
+@dataclasses.dataclass
+class PartitionPipeline:
+    """pre → bisect → post, each slot a registered stage (module docstring).
+
+    ``bisect_kw`` goes to the bisect stage verbatim; ``post_kw`` to every
+    post stage, filtered against each stage's signature (the built-ins
+    share the ``balance_tol`` surface; ``sweeps`` is declared — and hence
+    received — by "refine" only).
+    """
+
+    pre: str = "rcb"
+    bisect: str = "rsb-batched"
+    post: tuple = ("repair", "refine")
+    bisect_kw: dict = dataclasses.field(default_factory=dict)
+    post_kw: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.pre not in PRE_STAGES:
+            raise ValueError(
+                f"unknown pre stage: {self.pre!r} (have {PRE_STAGES})")
+        if self.bisect not in _BISECT_STAGES:
+            raise ValueError(
+                f"unknown bisect stage: {self.bisect!r} "
+                f"(have {bisect_stage_names()})")
+        self.post = tuple(self.post)
+        for name in self.post:
+            if name not in _POST_STAGES:
+                raise ValueError(
+                    f"unknown post stage: {name!r} "
+                    f"(have {post_stage_names()})")
+
+    def run(self, obj, nparts: int, *, coords: np.ndarray | None = None,
+            weights: np.ndarray | None = None) -> PartitionContext:
+        """Partition a HexMesh or Graph; returns the full context."""
+        ctx = _make_context(obj, nparts, coords, weights)
+        spectral = self.bisect.startswith("rsb")
+
+        # --- pre: reorder hint (rcb/rib) or one-shot permutation (sfc)
+        t0 = time.perf_counter()
+        hint, order = None, None
+        run_ctx = ctx
+        if spectral and self.pre in ("rcb", "rib"):
+            hint = self.pre  # per-level reorder, applied inside the driver
+        elif spectral and self.pre == "sfc":
+            if ctx.coords is not None:
+                from repro.core.sfc import sfc_order
+
+                order = sfc_order(ctx.coords)
+                run_ctx = _permuted_input(ctx, order)
+        ctx.stages.append(StageRecord(
+            kind="pre", name=self.pre, seconds=time.perf_counter() - t0,
+            info={"mode": ("per-level" if hint else
+                           "permute" if order is not None else "noop")},
+        ))
+
+        # --- bisect
+        t0 = time.perf_counter()
+        parts, report = _BISECT_STAGES[self.bisect](run_ctx, hint,
+                                                    **self.bisect_kw)
+        dt = time.perf_counter() - t0
+        if order is not None:   # map labels back to the caller's order
+            unperm = np.empty_like(parts)
+            unperm[order] = parts
+            parts = unperm
+            if ctx.graph is None and run_ctx.graph is not None:
+                # The bisect stage assembled the permuted dual graph; one
+                # cheap CSR relabel recovers the caller-order graph, so the
+                # post stages don't pay a second incidence-table assembly.
+                ctx.graph = run_ctx.graph.sub(np.argsort(order))
+        if report is None:
+            report = RSBReport(records=[], seconds=dt, engine="-",
+                               pre=self.pre)
+        ctx.parts = np.asarray(parts, dtype=np.int64)
+        ctx.parts_raw = ctx.parts.copy()
+        ctx.report = report
+        ctx.stages.append(StageRecord(
+            kind="bisect", name=self.bisect, seconds=dt,
+            info={"iterations": report.total_iterations},
+        ))
+
+        # --- post
+        if self.post:
+            graph = ctx.require_graph()
+            agg = PostStats()
+            for i, name in enumerate(self.post):
+                t0 = time.perf_counter()
+                fn = _POST_STAGES[name]
+                parts, stats = fn(graph, ctx.parts, nparts,
+                                  weights=ctx.weights,
+                                  **_stage_kw(fn, self.post_kw))
+                dt = time.perf_counter() - t0
+                ctx.parts = np.asarray(parts, dtype=np.int64)
+                agg.stages.append(name)
+                agg.fragments_repaired += stats.fragments_repaired
+                agg.forced_moves += stats.forced_moves
+                # final state, not a sum: a later repair can clear earlier
+                # stages' leftovers
+                agg.unrepaired_fragments = stats.unrepaired_fragments
+                agg.moves_applied += stats.moves_applied
+                agg.sweeps.extend(stats.sweeps)
+                agg.seconds += dt
+                ctx.stages.append(StageRecord(
+                    kind="post", name=name, seconds=dt,
+                    info={"cut_before": stats.cut_before,
+                          "cut_after": stats.cut_after,
+                          "fragments": stats.fragments_repaired,
+                          "moves": stats.moves_applied},
+                ))
+                if i == 0:
+                    agg.cut_before = stats.cut_before
+                agg.cut_after = stats.cut_after
+            report.post = agg
+        return ctx
+
+
+# ---------------------------------------------------------------------------
+# Front door (the classic keyword surface, now a pipeline builder)
+# ---------------------------------------------------------------------------
+
+_ENGINE_TO_BISECT = {"batched": "rsb-batched", "recursive": "rsb-recursive"}
+
+# Explicit per-stage keyword routing: the old front door forwarded **kw
+# blindly, silently dropping sfc's curve/bits and rcb/rib's everything.
+_RSB_KW = {"method", "pre", "tol", "window", "max_restarts", "seed",
+           "warm_start", "multilevel", "fine_restarts", "precond"}
+_RSB_MESH_KW = _RSB_KW | {"laplacian"}
+_RSB_GRAPH_KW = _RSB_KW | {"use_kernel"}
+_GEOM_KW = {"rcb": set(), "rib": set(), "sfc": {"curve", "bits"},
+            "random": {"seed"}}
+
+_REFINE_SPECS = {
+    "none": (), "repair": ("repair",), "refine": ("refine",),
+    "repair+refine": ("repair", "refine"),
+}
+
+
+def parse_refine(refine) -> tuple:
+    """``refine=`` spec → post-stage tuple ("none" is the escape hatch)."""
+    if refine is None:
+        return _REFINE_SPECS["repair+refine"]
+    if isinstance(refine, str):
+        try:
+            return _REFINE_SPECS[refine]
+        except KeyError:
+            raise ValueError(
+                f"unknown refine spec: {refine!r} "
+                f"(have {tuple(_REFINE_SPECS)} or a stage tuple)") from None
+    return tuple(refine)
+
+
+def _check_kw(kw: dict, allowed: set, who: str) -> None:
+    unknown = set(kw) - allowed
+    if unknown:
+        raise TypeError(
+            f"unknown keyword(s) for partitioner {who!r}: "
+            f"{sorted(unknown)} (allowed: {sorted(allowed)})")
+
+
+def partition(
+    obj,
+    nparts: int,
+    *,
+    partitioner: str = "rsb",
+    coords: np.ndarray | None = None,
+    weights: np.ndarray | None = None,
+    engine: str = "batched",
+    refine: str | tuple | None = None,
+    refine_sweeps: int = 4,
+    balance_tol: float = 0.05,
+    **kw,
+) -> np.ndarray:
+    """Uniform front door: partitioner ∈ {rsb, rsb_inverse, rcb, rib, sfc,
+    random}, built as a :class:`PartitionPipeline` run.
+
+    ``refine`` selects the post stages: "repair+refine" (the default for
+    the RSB family — parRSB ships repaired/smoothed labels, not raw
+    bisections), "repair", "refine", "none", or an explicit stage tuple.
+    Geometric/random baselines default to "none" so they stay raw
+    comparison points; pass ``refine=`` explicitly to post-process them.
+    ``refine_sweeps``/``balance_tol`` parameterize the post stages.
+
+    ``engine`` selects the RSB driver ("batched"/"recursive"); remaining
+    keywords are routed to the selected stage and unknown keys raise.
+    Use :meth:`PartitionPipeline.run` directly to get the full context
+    (report with post section, per-stage timings) instead of labels only.
+    """
+    is_mesh = hasattr(obj, "vert_gid")
+    post_kw = dict(sweeps=refine_sweeps, balance_tol=balance_tol)
+
+    if partitioner in ("rsb", "rsb_lanczos", "rsb_inverse"):
+        if engine not in _ENGINE_TO_BISECT:
+            raise ValueError(f"unknown engine: {engine}")
+        if partitioner == "rsb_inverse":
+            kw["method"] = "inverse"
+        _check_kw(kw, _RSB_MESH_KW if is_mesh else _RSB_GRAPH_KW, partitioner)
+        pre = kw.pop("pre", "rcb")
+        pipe = PartitionPipeline(
+            pre=pre or "none", bisect=_ENGINE_TO_BISECT[engine],
+            post=parse_refine(refine), bisect_kw=kw, post_kw=post_kw,
+        )
+    elif partitioner in _GEOM_KW:
+        _check_kw(kw, _GEOM_KW[partitioner], partitioner)
+        pipe = PartitionPipeline(
+            pre="none", bisect=partitioner,
+            post=parse_refine("none" if refine is None else refine),
+            bisect_kw=kw, post_kw=post_kw,
+        )
+    else:
+        raise ValueError(f"unknown partitioner: {partitioner}")
+
+    return pipe.run(obj, nparts, coords=coords, weights=weights).parts

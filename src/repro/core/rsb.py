@@ -100,6 +100,7 @@ class RSBReport:
     pre: str = "none"          # geometric pre-partitioning used ("rcb"/"rib")
     precond: str = "none"      # inverse-iteration preconditioner ("jacobi"/"amg")
     multilevel: bool = False   # coarse-to-fine warm starts active
+    post: object = None        # refine.PostStats once pipeline post stages ran
 
     @property
     def total_iterations(self) -> int:
@@ -536,50 +537,13 @@ def _rsb_graph_batched(
     )
 
 
-def partition(
-    obj,
-    nparts: int,
-    *,
-    partitioner: str = "rsb",
-    coords: np.ndarray | None = None,
-    weights: np.ndarray | None = None,
-    engine: str = "batched",
-    **kw,
-) -> np.ndarray:
-    """Uniform front door: partitioner ∈ {rsb, rsb_inverse, rcb, rib, sfc, random}.
-
-    `engine` selects the RSB driver: "batched" (default) runs every
-    bisection of a tree level in one jitted, vmapped Fiedler solve per
-    shape bucket; "recursive" is the sequential per-node reference.  The
-    flag is ignored by the geometric partitioners.
+def partition(obj, nparts: int, **kw) -> np.ndarray:
+    """Uniform front door: partitioner ∈ {rsb, rsb_inverse, rcb, rib, sfc,
+    random}.  Compatibility wrapper over the composable stage pipeline —
+    see :func:`repro.core.pipeline.partition` for the full surface
+    (``refine=`` post stages, explicit per-stage kwarg routing) and
+    :class:`repro.core.pipeline.PartitionPipeline` for report + timings.
     """
-    from repro.core.rcb import rcb_parts, rib_parts
-    from repro.core.sfc import sfc_parts
+    from repro.core.pipeline import partition as _pipeline_partition
 
-    is_mesh = hasattr(obj, "vert_gid")
-    c = obj.coords if is_mesh and coords is None else coords
-    w = obj.weights if is_mesh and weights is None else weights
-    n = obj.nelems if is_mesh else obj.n
-
-    if partitioner in ("rsb", "rsb_lanczos", "rsb_inverse"):
-        method = "inverse" if partitioner == "rsb_inverse" else kw.pop("method", "lanczos")
-        if is_mesh:
-            parts, _ = rsb_partition_mesh(
-                obj, nparts, method=method, engine=engine, **kw
-            )
-        else:
-            parts, _ = rsb_partition_graph(
-                obj, nparts, coords=c, weights=w, method=method, engine=engine,
-                **kw
-            )
-        return parts
-    if partitioner == "rcb":
-        return rcb_parts(c, nparts, w)
-    if partitioner == "rib":
-        return rib_parts(c, nparts, w)
-    if partitioner == "sfc":
-        return sfc_parts(c, nparts, w)
-    if partitioner == "random":
-        rng = np.random.default_rng(kw.get("seed", 0))
-        return rng.permutation(np.arange(n) % nparts)
-    raise ValueError(f"unknown partitioner: {partitioner}")
+    return _pipeline_partition(obj, nparts, **kw)

@@ -82,7 +82,10 @@ def sfc_parts(
     weights: np.ndarray | None = None,
     *,
     curve: str = "hilbert",
+    bits: int = 16,
 ) -> np.ndarray:
-    order = sfc_order(coords, curve=curve)
+    if curve not in ("hilbert", "morton"):
+        raise ValueError(f"unknown curve: {curve!r}")
+    order = sfc_order(coords, curve=curve, bits=bits)
     w = np.ones(coords.shape[0]) if weights is None else np.asarray(weights, np.float64)
     return _parts_from_order(order, w, nparts)

@@ -85,16 +85,32 @@ class HaloPlan:                                # fields break field-wise ==
         }
 
 
-def plan_halo_sharding(graph, parts: np.ndarray, nparts: int,
+def plan_halo_sharding(graph, parts, nparts: int | None = None,
                        *, pad_to: int = 1) -> HaloPlan:
     """Build a :class:`HaloPlan` from a node→shard assignment.
+
+    ``parts`` is either a label array or a partition-pipeline
+    :class:`~repro.core.pipeline.PartitionContext` (anything with
+    ``.parts``/``.nparts``) — the pipeline's output plugs in directly, and
+    its report (post-stage metrics, per-stage timings) stays attached for
+    the caller.  ``nparts`` may be omitted for contexts (taken from the
+    context) and label arrays (inferred as ``max+1``).
 
     ``parts`` need not be balanced — blocks are padded to the largest
     shard.  ``pad_to`` rounds ``n_local``/``halo``/``max_edges`` up to a
     multiple (TPU lane alignment; padding rows stay fully masked).
     Host-side NumPy; O(nnz log nnz).
     """
+    if hasattr(parts, "parts"):          # PartitionContext (duck-typed)
+        ctx = parts
+        if ctx.parts is None:
+            raise ValueError("pipeline context has no parts (run() first)")
+        if nparts is None:
+            nparts = ctx.nparts
+        parts = ctx.parts
     parts = np.asarray(parts, dtype=np.int64)
+    if nparts is None:
+        nparts = int(parts.max()) + 1 if parts.size else 1
     n = graph.n
     if parts.shape != (n,):
         raise ValueError(f"parts has shape {parts.shape}, expected ({n},)")

@@ -16,4 +16,5 @@ from repro.mesh.graphs import (
     build_csr,
     csr_to_ell,
     connected_components,
+    connected_labels,
 )

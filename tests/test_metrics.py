@@ -48,3 +48,37 @@ def test_single_part_degenerate():
     m = partition_metrics(g, np.zeros(9, np.int64), 1)
     assert m.edge_cut == 0.0
     assert m.max_neighbors == 0
+    assert m.disconnected_parts == 0
+    assert m.component_count == 1
+
+
+def test_connected_parts_census():
+    """Both halves of a clean split are connected."""
+    g = grid_graph_2d(4, 4)
+    parts = (np.arange(16) // 8).astype(np.int64)
+    m = partition_metrics(g, parts, 2)
+    assert m.disconnected_parts == 0
+    assert m.component_count == 2
+
+
+def test_disconnected_parts_detected():
+    """Two opposite corners assigned to part 1: part 1 has two components
+    (disconnected), part 0 (the remainder) stays connected."""
+    g = grid_graph_2d(4, 4)
+    parts = np.zeros(16, np.int64)
+    parts[0] = parts[15] = 1
+    m = partition_metrics(g, parts, 2)
+    assert m.disconnected_parts == 1
+    assert m.component_count == 3
+    # the fields ride through row() for the benchmark tables
+    row = m.row()
+    assert row["disconnected_parts"] == 1 and row["component_count"] == 3
+
+
+def test_isolated_nodes_count_as_components():
+    """Nodes with no intra-part edges are their own components."""
+    g = grid_graph_2d(2, 2)
+    parts = np.array([0, 1, 1, 0])  # both parts are diagonal pairs
+    m = partition_metrics(g, parts, 2)
+    assert m.disconnected_parts == 2
+    assert m.component_count == 4

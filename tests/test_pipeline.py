@@ -1,0 +1,251 @@
+"""Composable partition pipeline: stage wiring, front-door compatibility
+(bit-for-bit refine="none" parity with the raw drivers), kwarg routing,
+presets, and the pipeline-output contract consumers rely on."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PartitionPipeline,
+    parse_refine,
+    partition,
+    partition_metrics,
+    rsb_partition_graph,
+    rsb_partition_mesh,
+)
+from repro.configs.parrsb import PIPELINE_PRESETS, make_pipeline
+from repro.dist.partition_aware import plan_halo_sharding
+from repro.mesh import box_mesh, dual_graph, grid_graph_2d, pebble_mesh
+
+
+@pytest.fixture(scope="module")
+def box():
+    m = box_mesh(8, 8, 4)
+    return m, dual_graph(m)
+
+
+@pytest.fixture(scope="module")
+def default_ctx(box):
+    m, _ = box
+    return PartitionPipeline().run(m, 8)
+
+
+def test_refine_none_bit_for_bit(box):
+    """The escape hatch reproduces the raw driver labels exactly."""
+    m, _ = box
+    ref, _ = rsb_partition_mesh(m, 8, tol=1e-3)
+    got = partition(m, 8, refine="none", tol=1e-3)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_refine_none_bit_for_bit_graph(box):
+    m, g = box
+    ref, _ = rsb_partition_graph(g, 8, coords=m.coords, tol=1e-3)
+    got = partition(g, 8, coords=m.coords, refine="none", tol=1e-3)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_default_pipeline_refines(box, default_ctx):
+    """Default post stage: cut no worse than raw, zero disconnected parts,
+    parts_raw preserved alongside."""
+    m, g = box
+    ctx = default_ctx
+    pm_raw = partition_metrics(g, ctx.parts_raw, 8)
+    pm = partition_metrics(g, ctx.parts, 8)
+    assert pm.edge_cut <= pm_raw.edge_cut
+    assert pm.disconnected_parts == 0
+    assert ctx.report.post is not None
+    assert ctx.report.post.cut_after == pm.edge_cut
+    assert ctx.report.post.stages == ["repair", "refine"]
+
+
+def test_stage_records(default_ctx):
+    ctx = default_ctx
+    kinds = [(s.kind, s.name) for s in ctx.stages]
+    assert kinds == [("pre", "rcb"), ("bisect", "rsb-batched"),
+                     ("post", "repair"), ("post", "refine")]
+    assert all(s.seconds >= 0 for s in ctx.stages)
+    assert ctx.seconds == pytest.approx(ctx.stage_seconds())
+    stats = ctx.stats()
+    assert stats["nparts"] == 8 and len(stats["stages"]) == 4
+    assert "post" in stats
+
+
+@pytest.mark.parametrize("nparts", [1, 3, 5, 8, 16])
+def test_pipeline_nparts_parity(box, nparts):
+    """Power-of-two and non-power-of-two nparts, plus the degenerate
+    single-part case, all balance and cover through the pipeline."""
+    m, g = box
+    ctx = PartitionPipeline(bisect_kw=dict(tol=1e-2, max_restarts=10)).run(
+        m, nparts)
+    assert set(np.unique(ctx.parts)) == set(range(nparts))
+    pm = partition_metrics(g, ctx.parts, nparts)
+    assert pm.disconnected_parts == 0
+    wsum = np.bincount(ctx.parts, weights=m.weights, minlength=nparts)
+    assert wsum.max() <= 1.06 * wsum.mean() + m.weights.max()
+
+
+def test_batch_of_one_matches_direct(box):
+    """nparts=2 (a single bisection level, batch of one subproblem) through
+    the pipeline matches the direct driver bit-for-bit with refine off."""
+    m, _ = box
+    ref, _ = rsb_partition_mesh(m, 2, tol=1e-3)
+    ctx = PartitionPipeline(post=()).run(m, 2)
+    np.testing.assert_array_equal(ctx.parts, ref)
+    np.testing.assert_array_equal(ctx.parts_raw, ref)  # raw == final here
+
+
+def test_geometric_bisect_stages(box):
+    m, g = box
+    for name in ("rcb", "rib", "sfc", "random"):
+        ctx = PartitionPipeline(pre="none", bisect=name, post=()).run(m, 4)
+        assert ctx.parts.shape == (m.nelems,)
+        assert ctx.report.total_iterations == 0
+    # geometric labels healed by the post stage (the "geometric" preset)
+    pipe = make_pipeline("geometric")
+    ctx = pipe.run(m, 4)
+    assert partition_metrics(g, ctx.parts, 4).disconnected_parts == 0
+
+
+def test_front_door_kwarg_routing(box):
+    m, _ = box
+    p1 = partition(m, 4, partitioner="sfc", curve="morton", bits=8)
+    p2 = partition(m, 4, partitioner="sfc", curve="hilbert")
+    assert p1.shape == p2.shape
+    with pytest.raises(TypeError, match="unknown keyword"):
+        partition(m, 4, partitioner="rcb", curve="hilbert")
+    with pytest.raises(TypeError, match="unknown keyword"):
+        partition(m, 4, partitioner="rib", bits=4)
+    with pytest.raises(TypeError, match="unknown keyword"):
+        partition(m, 4, partitioner="random", tol=1e-3)
+    with pytest.raises(TypeError, match="unknown keyword"):
+        partition(m, 4, partitioner="rsb", curve="hilbert", refine="none")
+    with pytest.raises(ValueError, match="unknown curve"):
+        partition(m, 4, partitioner="sfc", curve="peano")
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        partition(m, 4, partitioner="metis")
+    with pytest.raises(ValueError, match="unknown engine"):
+        partition(m, 4, partitioner="rsb", engine="nope")
+    with pytest.raises(ValueError, match="unknown refine"):
+        partition(m, 4, refine="polish")
+
+
+def test_unknown_stage_names_raise():
+    with pytest.raises(ValueError, match="unknown pre"):
+        PartitionPipeline(pre="metis")
+    with pytest.raises(ValueError, match="unknown bisect"):
+        PartitionPipeline(bisect="metis")
+    with pytest.raises(ValueError, match="unknown post"):
+        PartitionPipeline(post=("polish",))
+
+
+def test_parse_refine():
+    assert parse_refine(None) == ("repair", "refine")
+    assert parse_refine("none") == ()
+    assert parse_refine("repair") == ("repair",)
+    assert parse_refine(("refine",)) == ("refine",)
+
+
+def test_presets(box):
+    m, _ = box
+    assert set(PIPELINE_PRESETS) >= {"default", "raw", "quality",
+                                     "geometric", "reference"}
+    raw = make_pipeline("raw")
+    assert raw.post == ()
+    q = make_pipeline("quality")
+    assert q.post_kw["sweeps"] == 8 and q.pre == "rib"
+    # overrides merge
+    q2 = make_pipeline("quality", post_kw=dict(sweeps=2))
+    assert q2.post_kw["sweeps"] == 2 and q2.post_kw["balance_tol"] == 0.03
+    # config fields are the base layer: default preset + knobs come from it
+    from repro.configs.parrsb import ParRSBConfig
+
+    cfg = ParRSBConfig(refine_sweeps=6, balance_tol=0.02, pipeline="raw")
+    p = make_pipeline(config=cfg)
+    assert p.post == () and p.post_kw["sweeps"] == 6
+    assert p.post_kw["balance_tol"] == 0.02
+    with pytest.raises(ValueError, match="unknown pipeline preset"):
+        make_pipeline("metis")
+
+
+def test_plan_halo_sharding_accepts_context(box, default_ctx):
+    m, g = box
+    ctx = default_ctx
+    plan_a = plan_halo_sharding(g, ctx)            # context, nparts implied
+    plan_b = plan_halo_sharding(g, ctx.parts, 8)   # classic array call
+    assert plan_a.n_shards == 8
+    np.testing.assert_array_equal(plan_a.shard_of, plan_b.shard_of)
+    assert plan_a.halo == plan_b.halo
+    # nparts inference for plain arrays
+    plan_c = plan_halo_sharding(g, ctx.parts)
+    assert plan_c.n_shards == 8
+
+
+def test_pre_sfc_permutation_mode(box):
+    """pre="sfc" reorders the input once, bisects, and maps labels back to
+    the caller's element order."""
+    m, g = box
+    ctx = PartitionPipeline(pre="sfc", post=()).run(m, 4)
+    assert ctx.stages[0].info["mode"] == "permute"
+    # the permuted run's dual graph is relabeled back for reuse and must
+    # equal the caller-order dual graph exactly
+    assert ctx.graph is not None
+    np.testing.assert_array_equal(ctx.graph.indptr, g.indptr)
+    np.testing.assert_array_equal(ctx.graph.indices, g.indices)
+    np.testing.assert_allclose(ctx.graph.weights, g.weights)
+    pm = partition_metrics(g, ctx.parts, 4)
+    assert set(np.unique(ctx.parts)) == set(range(4))
+    counts = np.bincount(ctx.parts, minlength=4)
+    assert counts.max() - counts.min() <= 1
+    # sanity: quality in the same ballpark as the default pre
+    ref = PartitionPipeline(post=()).run(m, 4)
+    assert pm.edge_cut <= 1.5 * partition_metrics(g, ref.parts, 4).edge_cut
+
+
+def test_custom_post_stage_registration(box):
+    from repro.core import register_post_stage
+    from repro.core.refine import PostStats, edge_cut
+
+    calls = []
+
+    def noop_stage(graph, parts, nparts, *, weights, **kw):
+        calls.append(nparts)
+        c = edge_cut(graph, parts)
+        return parts, PostStats(stages=["noop"], cut_before=c, cut_after=c)
+
+    register_post_stage("noop", noop_stage)
+    try:
+        m, _ = box
+        ctx = PartitionPipeline(post=("noop",)).run(m, 4)
+        assert calls == [4]
+        assert ctx.report.post.stages == ["noop"]
+    finally:
+        from repro.core import pipeline as _pl
+
+        del _pl._POST_STAGES["noop"]
+
+
+def test_mesh_weight_overrides_reach_every_stage(box):
+    """Caller weights= overrides must steer the bisector (both engines and
+    the sfc pre-path), not just the post stage."""
+    m, _ = box
+    rng = np.random.default_rng(0)
+    w = rng.integers(1, 4, m.nelems).astype(np.float64)
+    for pipe in (PartitionPipeline(post=()),
+                 PartitionPipeline(bisect="rsb-recursive", post=()),
+                 PartitionPipeline(pre="sfc", post=())):
+        pipe.bisect_kw = dict(tol=1e-2, max_restarts=10)
+        ctx = pipe.run(m, 4, weights=w)
+        wsum = np.bincount(ctx.parts, weights=w, minlength=4)
+        assert wsum.max() / wsum.mean() < 1.1, (pipe.pre, pipe.bisect)
+
+
+def test_pipeline_graph_input_with_weights():
+    g = grid_graph_2d(12, 12)
+    coords = np.stack(np.meshgrid(np.arange(12), np.arange(12),
+                                  indexing="ij"), -1).reshape(-1, 2).astype(float)
+    w = np.ones(g.n)
+    ctx = PartitionPipeline().run(g, 4, coords=coords, weights=w)
+    pm = partition_metrics(g, ctx.parts, 4)
+    assert pm.disconnected_parts == 0
+    assert pm.edge_cut <= partition_metrics(g, ctx.parts_raw, 4).edge_cut

@@ -220,13 +220,21 @@ def test_graph_warm_start_plumbed(pebble):
 
 
 def test_partition_front_door_engine_flag(box):
+    # refine="none" pins the raw driver labels (the ≤1-element invariant is
+    # the bisector's; the default repair/refine post stage trades up to
+    # balance_tol of it for cut — covered in test_pipeline).
     m, g = box
     pb = partition(m, 4, partitioner="rsb", engine="batched", tol=1e-2,
-                   max_restarts=10)
+                   max_restarts=10, refine="none")
     pr = partition(m, 4, partitioner="rsb", engine="recursive", tol=1e-2,
-                   max_restarts=10)
+                   max_restarts=10, refine="none")
     for p in (pb, pr):
         counts = np.bincount(p, minlength=4)
         assert counts.max() - counts.min() <= 1
+    # default (refined) front door: balance within the post-stage corridor
+    pd = partition(m, 4, partitioner="rsb", engine="batched", tol=1e-2,
+                   max_restarts=10)
+    counts = np.bincount(pd, minlength=4)
+    assert counts.max() <= 1.06 * counts.mean()
     with pytest.raises(ValueError):
         rsb_partition_mesh(m, 4, engine="nope")
