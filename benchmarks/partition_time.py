@@ -4,11 +4,13 @@ level-synchronous batched engine vs the recursive per-node reference), and
 for the batched inverse path with BOTH preconditioners (Jacobi vs the
 packed multilevel AMG V-cycle).
 
-Every combination runs the full partition pipeline ONCE and emits TWO
+Every combination runs the full partition pipeline ONCE and emits THREE
 rows: `refine="none"` (the raw bisection labels, from the pipeline's
-`parts_raw` — no second solve) and `refine="repair+refine"` (the default
-post stage).  Rows carry `disconnected` and `post_seconds`, so the CI
-smoke gate can assert the refine invariants (refined cut ≤ raw cut, zero
+`parts_raw` — no second solve), `refine="repair+refine"` (the default
+greedy post stage), and `refine="repair+kway"` (the hill-climbing k-way FM
+chain re-run on the same `parts_raw` — still no second solve).  Rows carry
+`disconnected` and `post_seconds`, so the CI smoke gate can assert the
+refine invariants (refined cut ≤ raw cut, kway cut ≤ greedy cut, zero
 disconnected parts, bounded post wall-clock) per combination.
 
 Validates:
@@ -35,7 +37,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.bench_util import emit
-from repro.core import PartitionPipeline, partition_metrics
+from repro.core import PartitionPipeline, partition_metrics, run_post_stages
 from repro.dist.partition_aware import plan_halo_sharding
 from repro.mesh import dual_graph, pebble_mesh
 
@@ -121,6 +123,16 @@ def run(
                     record(ctx.parts, dt, engine=engine, method=method,
                            pre=pre, report=ctx.report,
                            refine="repair+refine", post_seconds=post_dt)
+                    # Greedy-vs-kway axis from the SAME solve: re-run the
+                    # k-way FM chain on parts_raw (no second eigensolve).
+                    t1 = time.perf_counter()
+                    parts_k, _, _ = run_post_stages(
+                        ctx.require_graph(), ctx.parts_raw, nparts,
+                        ("repair", "kway"), weights=ctx.weights)
+                    k_dt = time.perf_counter() - t1
+                    record(parts_k, dt - post_dt + k_dt, engine=engine,
+                           method=method, pre=pre, report=ctx.report,
+                           refine="repair+kway", post_seconds=k_dt)
     return rows
 
 

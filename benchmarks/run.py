@@ -74,9 +74,12 @@ def _engine_pre_table(partition_rows) -> list:
     """
     if not partition_rows:
         return []
-    # One solve emits a refine="none" and a refined row; the refined row is
-    # the canonical full-pipeline measurement (old baselines have no axis).
-    canon = [r for r in partition_rows if r.get("refine", "none") != "none"]
+    # One solve emits refine="none", greedy, and kway rows; the greedy
+    # (repair+refine) row is the canonical full-pipeline measurement (old
+    # baselines have no axis).
+    canon = [r for r in partition_rows
+             if r.get("refine") == "repair+refine"] or [
+        r for r in partition_rows if r.get("refine", "none") != "none"]
     cells: dict = {}
     for r in canon or partition_rows:
         key = (r["method"], r["pre"], r.get("precond", "jacobi"))
@@ -105,12 +108,14 @@ def _engine_pre_table(partition_rows) -> list:
 
 def _engine_speedup(quality_rows, partition_rows) -> dict:
     """rsb_batched vs rsb_recursive wall-clock, per suite.  Refine-axis
-    duplicate rows (raw labels re-recorded from the same solve) are
-    excluded so a solve is counted once."""
+    duplicate rows (raw labels and the kway re-refinement, both re-recorded
+    from the same solve) are excluded so a solve is counted once."""
     quality_rows = [r for r in quality_rows
-                    if not str(r.get("name", "")).endswith("_raw")]
+                    if not str(r.get("name", "")).endswith(("_raw", "_kway"))]
     partition_rows = [r for r in partition_rows
-                      if r.get("refine", "x") != "none"] or partition_rows
+                      if r.get("refine", "x") == "repair+refine"] or [
+        r for r in partition_rows if r.get("refine", "x") != "none"
+    ] or partition_rows
     out: dict = {}
     q_b = sum(r["seconds"] for r in quality_rows if r.get("engine") == "batched")
     q_r = sum(r["seconds"] for r in quality_rows

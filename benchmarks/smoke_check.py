@@ -7,8 +7,13 @@
 or if the refine-stage invariants fail WITHIN the current run:
 
   * a refined row's cut exceeds its raw (refine="none") sibling's, or
+  * a kway row's cut exceeds its greedy (refine="repair+refine") sibling's
+    (the hill-climbing k-way FM must never lose to the greedy sweeps), or
   * a refined row reports disconnected parts, or
-  * the post stage's summed wall clock exceeds 15% of the summed total.
+  * the greedy post stage's summed wall clock exceeds 15% of the summed
+    total, or the kway rows' summed post stage exceeds 25% of their summed
+    row totals (summed, not per row: the fastest solve's row is pure
+    measurement noise at the ~100 ms post scale of this box).
 
     PYTHONPATH=src python -m benchmarks.smoke_check [--baseline PATH]
 
@@ -47,7 +52,8 @@ from benchmarks import partition_time
 
 TOLERANCE = 1.10       # per-row: fail if cut > 110% of baseline
 WALL_TOLERANCE = 1.25  # total: fail if summed seconds > 125% of baseline
-POST_FRACTION = 0.15   # post stage wall clock ≤ 15% of the summed total
+POST_FRACTION = 0.15   # greedy post wall clock ≤ 15% of the summed total
+KWAY_POST_FRACTION = 0.25  # summed kway post ≤ 25% of summed kway row wall
 
 
 def _key(row) -> tuple:
@@ -59,7 +65,12 @@ def _key(row) -> tuple:
 
 def _wall_rows(rows) -> list:
     """Rows whose seconds sum to the config's wall clock, counting each
-    solve once: refined rows when the refine axis exists, else all."""
+    solve ONCE: the canonical greedy (repair+refine) rows when the refine
+    axis exists — the kway rows re-measure the same solve with a different
+    post chain — else any refined rows, else all."""
+    greedy = [r for r in rows if r.get("refine") == "repair+refine"]
+    if greedy:
+        return greedy
     refined = [r for r in rows if r.get("refine", "none") != "none"]
     return refined or list(rows)
 
@@ -84,14 +95,32 @@ def check_refine_invariants(rows, warm_rows=None) -> list:
             failures.append(
                 f"{r['disconnected']} disconnected part(s) after refine "
                 f"for {_key(r)[:4]}")
-    timed = [r for r in (rows if warm_rows is None else warm_rows)
-             if r.get("refine", "none") != "none"]
-    total = sum(r["seconds"] for r in timed)
-    post = sum(r.get("post_seconds", 0.0) for r in timed)
-    if timed and total > 0 and post > POST_FRACTION * total:
+    # k-way gate: the hill-climbing chain must never lose to the greedy
+    # sweeps it is meant to supersede (same solve, same corridor).
+    greedy = {_key(r)[:4]: r for r in rows
+              if r.get("refine") == "repair+refine"}
+    for r in (r for r in rows if r.get("refine") == "repair+kway"):
+        base = greedy.get(_key(r)[:4])
+        if base is not None and r["cut"] > base["cut"] + 1e-9:
+            failures.append(
+                f"kway cut {r['cut']:.0f} > greedy {base['cut']:.0f} "
+                f"for {_key(r)[:4]}")
+    timed = rows if warm_rows is None else warm_rows
+    canon = [r for r in timed if r.get("refine") == "repair+refine"] or [
+        r for r in timed if r.get("refine", "none") != "none"]
+    total = sum(r["seconds"] for r in canon)
+    post = sum(r.get("post_seconds", 0.0) for r in canon)
+    if canon and total > 0 and post > POST_FRACTION * total:
         failures.append(
             f"post stage {post:.3f}s exceeds {POST_FRACTION:.0%} of "
             f"total {total:.3f}s")
+    kway_rows = [r for r in timed if r.get("refine") == "repair+kway"]
+    k_total = sum(r["seconds"] for r in kway_rows)
+    k_post = sum(r.get("post_seconds", 0.0) for r in kway_rows)
+    if kway_rows and k_total > 0 and k_post > KWAY_POST_FRACTION * k_total:
+        failures.append(
+            f"kway post {k_post:.3f}s exceeds {KWAY_POST_FRACTION:.0%} of "
+            f"kway rows' total {k_total:.3f}s")
     return failures
 
 

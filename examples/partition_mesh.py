@@ -6,7 +6,8 @@ partitioners compared (RSB / RCB / RIB / SFC / random).
 
 import numpy as np
 
-from repro.core import PartitionPipeline, partition, partition_metrics
+from repro.core import (PartitionPipeline, partition, partition_metrics,
+                        run_post_stages)
 from repro.dist.partition_aware import plan_halo_sharding, scatter_features
 from repro.mesh import dual_graph, pebble_mesh
 
@@ -17,12 +18,16 @@ print(f"pebble-bed-like mesh: {mesh.nelems} elements "
       f"({(mesh.weights > 1).sum()} 'flow' elements at 2x weight)")
 print(f"{'method':<12}{'cut':>8}{'volume':>9}{'maxnbr':>7}{'halo':>6}"
       f"{'w-imb':>7}{'disc':>6}")
-# ONE pipeline run yields both rsb rows: "rsb" is the full pipeline
-# (repair + FM refinement on by default), "rsb_raw" its parts_raw — the
-# same bisection before the post stage, so the gap between the rows is
-# exactly the quality the post stage recovers.
+# ONE pipeline run yields all three rsb rows: "rsb" is the full pipeline
+# (repair + greedy FM refinement on by default), "rsb_raw" its parts_raw —
+# the same bisection before the post stage — and "rsb_kway" the same
+# bisection refined by the hill-climbing k-way FM chain instead, so the
+# gaps between the rows are exactly what each post chain recovers.
 ctx = PartitionPipeline().run(mesh, nparts)
-rows = [("rsb", ctx.parts), ("rsb_raw", ctx.parts_raw)]
+parts_kway, _, _ = run_post_stages(graph, ctx.parts_raw, nparts,
+                                   ("repair", "kway"), weights=ctx.weights)
+rows = [("rsb", ctx.parts), ("rsb_kway", parts_kway),
+        ("rsb_raw", ctx.parts_raw)]
 rows += [(name, partition(mesh, nparts, partitioner=name))
          for name in ("rcb", "rib", "sfc", "random")]
 for name, parts in rows:

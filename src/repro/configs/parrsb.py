@@ -26,6 +26,7 @@ class ParRSBConfig:
     tol: float = 1e-3
     # Post-bisection quality stage (repair + FM boundary refinement)
     refine_sweeps: int = 4
+    kway_passes: int = 8
     balance_tol: float = 0.05
     pipeline: str = "default"
 
@@ -62,6 +63,15 @@ PIPELINE_PRESETS: dict = {
     # Recursive reference engine, refined — parity testing at full quality.
     "reference": dict(pre="rcb", bisect="rsb-recursive",
                       post=("repair", "refine")),
+    # Hill-climbing k-way FM post stage (repro.core.kway): negative-gain
+    # prefixes + rollback recover cut the greedy sweeps cannot.  Greedy
+    # stays the "default" preset until the bench gate proves k-way ≥
+    # greedy across suites.
+    "kway": dict(pre="rcb", bisect="rsb-batched", post=("repair", "kway")),
+    # Quality-first k-way: inertial reorder, deeper climb, tighter corridor.
+    "quality-kway": dict(pre="rib", bisect="rsb-batched",
+                         post=("repair", "kway"),
+                         post_kw=dict(passes=12, balance_tol=0.03)),
 }
 
 
@@ -82,7 +92,8 @@ def make_pipeline(preset: str | None = None, *,
             f"(have {tuple(PIPELINE_PRESETS)})")
     spec = {k: (dict(v) if isinstance(v, dict) else v)
             for k, v in PIPELINE_PRESETS[preset].items()}
-    post_kw = dict(sweeps=cfg.refine_sweeps, balance_tol=cfg.balance_tol)
+    post_kw = dict(sweeps=cfg.refine_sweeps, passes=cfg.kway_passes,
+                   balance_tol=cfg.balance_tol)
     post_kw.update(spec.pop("post_kw", {}))
     post_kw.update(overrides.pop("post_kw", {}))
     spec.update(overrides)

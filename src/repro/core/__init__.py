@@ -41,11 +41,18 @@ from repro.core.rsb import (
 from repro.core.refine import (
     PostStats,
     SweepRecord,
+    balance_corridor,
     edge_cut,
     refine_boundary,
     refine_stage,
     repair_components,
     repair_refine,
+)
+from repro.core.kway import (
+    KwayPassRecord,
+    KwayStats,
+    kway_fm,
+    kway_stage,
 )
 from repro.core.pipeline import (
     PartitionContext,
@@ -55,5 +62,6 @@ from repro.core.pipeline import (
     parse_refine,
     register_bisect_stage,
     register_post_stage,
+    run_post_stages,
 )
 from repro.core.metrics import partition_metrics, PartitionMetrics, comm_time_model, m2_words

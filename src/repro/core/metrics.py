@@ -28,6 +28,7 @@ class PartitionMetrics:
     total_volume: float         # Σ_p outgoing volume (ω words)
     avg_message_size: float     # mean over parts of volume_p / neighbors_p
     max_message_size: float
+    max_part_volume_words: float = 0.0  # max over parts of volume_p in words
     disconnected_parts: int = 0  # parts whose induced subgraph is not connected
     component_count: int = 0     # Σ_p components of part p's induced subgraph
 
@@ -95,6 +96,7 @@ def partition_metrics(
         total_volume=float(volume.sum()),
         avg_message_size=float(msg[neighbors > 0].mean()) if cut_mask.any() else 0.0,
         max_message_size=float(msg.max()) if cut_mask.any() else 0.0,
+        max_part_volume_words=float(words.max()) if cut_mask.any() else 0.0,
         disconnected_parts=int((comps_per_part > 1).sum()),
         component_count=int(comps_per_part.sum()),
     )
@@ -113,9 +115,15 @@ def m2_words(alpha: float = ALPHA_S, beta: float = BETA_S_PER_WORD) -> float:
 
 def comm_time_model(metrics: PartitionMetrics, *, alpha: float = ALPHA_S,
                     beta: float = BETA_S_PER_WORD) -> dict:
-    """Postal-model estimate (Eq. 1.2): T_c = α·M + β·W per part."""
+    """Postal-model estimate (Eq. 1.2): T_c = α·M + β·W per part.
+
+    W is the true per-part maximum outgoing volume in words (max over
+    parts of ``volume_p / 4 · dofs_per_face``).  The earlier
+    ``max_message_size × max_neighbors`` estimate mixed maxima attained by
+    *different* parts, overstating the bandwidth term whenever the
+    largest-average-message part is not the most-connected one."""
     M = metrics.max_neighbors
-    W = metrics.max_message_size * max(metrics.max_neighbors, 1)
+    W = metrics.max_part_volume_words
     return {
         "latency_s": alpha * M,
         "volume_s": beta * W,

@@ -20,8 +20,13 @@ stack:
   - ``post``   — an ordered tuple of registered refiners, by default
     ``("repair", "refine")``: connected-component repair then greedy
     weighted FM boundary sweeps (:mod:`repro.core.refine`), both
-    cut-non-increasing.  The "refine" stage closes with a repair pass so
-    the zero-disconnected-parts invariant survives articulation moves.
+    cut-non-increasing.  ``("repair", "kway")`` swaps the greedy sweeps
+    for the hill-climbing k-way FM (:mod:`repro.core.kway` — negative-gain
+    prefixes, rollback to the best prefix).  The "refine"/"kway" stages
+    close with a repair pass so the zero-disconnected-parts invariant
+    survives articulation moves.  One balance corridor — computed from the
+    part weights the chain starts with — governs the whole chain
+    (:func:`run_post_stages`).
 
 * :class:`PartitionContext` — what flows through the stages: the
   mesh/graph, coords, weights, the evolving ``parts``, the
@@ -50,7 +55,9 @@ import time
 
 import numpy as np
 
-from repro.core.refine import PostStats, refine_stage, repair_components
+from repro.core.kway import kway_stage
+from repro.core.refine import (PostStats, balance_corridor, refine_stage,
+                               repair_components)
 from repro.core.rsb import RSBReport, rsb_partition_graph, rsb_partition_mesh
 from repro.mesh.graphs import Graph, dual_graph_from_incidence
 
@@ -218,11 +225,13 @@ def _register_builtin_stages() -> None:
     register_bisect_stage("sfc", _geometric_stage(
         lambda c, p, w, **kw: sfc_parts(c, p, w, **kw)))
     register_bisect_stage("random", _random_stage)
-    # The refine.py functions ARE the stages (their signatures declare the
-    # keywords each consumes; refine_stage closes with a repair pass so the
-    # zero-disconnected invariant survives FM articulation moves).
+    # The refine.py/kway.py functions ARE the stages (their signatures
+    # declare the keywords each consumes; refine_stage and kway_stage close
+    # with a repair pass so the zero-disconnected invariant survives FM
+    # articulation moves).
     register_post_stage("repair", repair_components)
     register_post_stage("refine", refine_stage)
+    register_post_stage("kway", kway_stage)
 
 
 _register_builtin_stages()
@@ -259,6 +268,69 @@ def _permuted_input(ctx: PartitionContext, order: np.ndarray):
         coords=None if ctx.coords is None else ctx.coords[order],
         weights=None if ctx.weights is None else ctx.weights[order],
     )
+
+
+def run_post_stages(
+    graph: Graph,
+    parts: np.ndarray,
+    nparts: int,
+    post: tuple,
+    *,
+    weights: np.ndarray | None = None,
+    post_kw: dict | None = None,
+) -> tuple[np.ndarray, PostStats, list]:
+    """Run an ordered chain of registered post stages over ``parts``.
+
+    The balance corridor is computed ONCE here — from the part weights the
+    chain starts with — and threaded through every stage, so a
+    cap-exceeding forced move in one stage cannot widen the corridor for
+    the stages after it (callers may pre-seed ``post_kw["corridor"]`` to
+    pin an even earlier reference).  Returns the refined labels, the
+    aggregated :class:`PostStats`, and one :class:`StageRecord` per stage.
+
+    This is what :meth:`PartitionPipeline.run` executes after the bisect
+    stage; benchmarks call it directly on a context's ``parts_raw`` to
+    compare post chains (e.g. greedy vs k-way) from ONE bisection solve.
+    """
+    post_kw = dict(post_kw or {})
+    parts = np.asarray(parts, dtype=np.int64)
+    if post_kw.get("corridor") is None:
+        post_kw["corridor"] = balance_corridor(
+            parts, nparts, weights, post_kw.get("balance_tol", 0.05))
+    corridor = post_kw["corridor"]
+    agg = PostStats(corridor=tuple(corridor))
+    records = []
+    for i, name in enumerate(post):
+        t0 = time.perf_counter()
+        fn = _POST_STAGES[name]
+        parts, stats = fn(graph, parts, nparts, weights=weights,
+                          **_stage_kw(fn, post_kw))
+        dt = time.perf_counter() - t0
+        parts = np.asarray(parts, dtype=np.int64)
+        agg.stages.append(name)
+        agg.fragments_repaired += stats.fragments_repaired
+        agg.forced_moves += stats.forced_moves
+        # final state, not a sum: a later repair can clear earlier
+        # stages' leftovers
+        agg.unrepaired_fragments = stats.unrepaired_fragments
+        agg.moves_applied += stats.moves_applied
+        agg.sweeps.extend(stats.sweeps)
+        if stats.kway is not None:
+            agg.kway = stats.kway
+        agg.seconds += dt
+        records.append(StageRecord(
+            kind="post", name=name, seconds=dt,
+            info={"cut_before": stats.cut_before,
+                  "cut_after": stats.cut_after,
+                  "fragments": stats.fragments_repaired,
+                  "moves": stats.moves_applied,
+                  "corridor": tuple(stats.corridor)
+                  if stats.corridor else None},
+        ))
+        if i == 0:
+            agg.cut_before = stats.cut_before
+        agg.cut_after = stats.cut_after
+    return parts, agg, records
 
 
 @dataclasses.dataclass
@@ -341,37 +413,14 @@ class PartitionPipeline:
             info={"iterations": report.total_iterations},
         ))
 
-        # --- post
+        # --- post (one corridor per chain, fixed from the bisection's
+        # part weights — see run_post_stages)
         if self.post:
-            graph = ctx.require_graph()
-            agg = PostStats()
-            for i, name in enumerate(self.post):
-                t0 = time.perf_counter()
-                fn = _POST_STAGES[name]
-                parts, stats = fn(graph, ctx.parts, nparts,
-                                  weights=ctx.weights,
-                                  **_stage_kw(fn, self.post_kw))
-                dt = time.perf_counter() - t0
-                ctx.parts = np.asarray(parts, dtype=np.int64)
-                agg.stages.append(name)
-                agg.fragments_repaired += stats.fragments_repaired
-                agg.forced_moves += stats.forced_moves
-                # final state, not a sum: a later repair can clear earlier
-                # stages' leftovers
-                agg.unrepaired_fragments = stats.unrepaired_fragments
-                agg.moves_applied += stats.moves_applied
-                agg.sweeps.extend(stats.sweeps)
-                agg.seconds += dt
-                ctx.stages.append(StageRecord(
-                    kind="post", name=name, seconds=dt,
-                    info={"cut_before": stats.cut_before,
-                          "cut_after": stats.cut_after,
-                          "fragments": stats.fragments_repaired,
-                          "moves": stats.moves_applied},
-                ))
-                if i == 0:
-                    agg.cut_before = stats.cut_before
-                agg.cut_after = stats.cut_after
+            parts, agg, records = run_post_stages(
+                ctx.require_graph(), ctx.parts, nparts, self.post,
+                weights=ctx.weights, post_kw=self.post_kw)
+            ctx.parts = parts
+            ctx.stages.extend(records)
             report.post = agg
         return ctx
 
@@ -394,6 +443,10 @@ _GEOM_KW = {"rcb": set(), "rib": set(), "sfc": {"curve", "bits"},
 _REFINE_SPECS = {
     "none": (), "repair": ("repair",), "refine": ("refine",),
     "repair+refine": ("repair", "refine"),
+    # Hill-climbing k-way FM (repro.core.kway): negative-gain prefixes with
+    # rollback to the best prefix.  Greedy "repair+refine" stays the
+    # default until the bench gate proves k-way ≥ greedy across suites.
+    "kway": ("kway",), "repair+kway": ("repair", "kway"),
 }
 
 
@@ -437,7 +490,8 @@ def partition(
 
     ``refine`` selects the post stages: "repair+refine" (the default for
     the RSB family — parRSB ships repaired/smoothed labels, not raw
-    bisections), "repair", "refine", "none", or an explicit stage tuple.
+    bisections), "repair+kway" (hill-climbing k-way FM), "repair",
+    "refine", "kway", "none", or an explicit stage tuple.
     Geometric/random baselines default to "none" so they stay raw
     comparison points; pass ``refine=`` explicitly to post-process them.
     ``refine_sweeps``/``balance_tol`` parameterize the post stages.

@@ -26,8 +26,18 @@ dual graph, host-side NumPy, as pipeline `post` stages:
   in descending gain order under two guards: (a) a node is skipped if any
   neighbor already moved this sweep (its precomputed gain would be stale),
   and (b) the move must keep both endpoint parts inside the weight-balance
-  corridor ``[floor, cap]``.  Applied gains are exact, so the cut is
-  strictly non-increasing across sweeps.
+  corridor ``[floor, cap]`` — when the best-connected target part would
+  overflow the cap, the move falls back to the best *feasible*
+  positive-gain target instead of skipping the node.  Applied gains are
+  exact, so the cut is strictly non-increasing across sweeps.
+
+The balance corridor is computed ONCE per post chain — from the part
+weights the chain starts with — and threaded through every stage via the
+``corridor=`` keyword (the pipeline does this; so do :func:`refine_stage`
+and :func:`repair_refine` for their internal sub-passes).  Recomputing it
+per stage would let a cap-exceeding forced repair move permanently widen
+the cap for every later stage.  Each stage records the corridor it used in
+``PostStats.corridor``.
 
 Single-node moves can disconnect a part (moving an articulation node), so
 :func:`refine_stage` — the "refine" stage the pipeline registers — closes
@@ -65,8 +75,10 @@ class PostStats:
     fragments_repaired: int = 0
     forced_moves: int = 0        # fragment moves that had to exceed the cap
     unrepaired_fragments: int = 0  # left behind when repair's round cap hit
-    moves_applied: int = 0       # FM single-node moves
+    moves_applied: int = 0       # FM single-node moves (kway: kept moves)
     sweeps: list = dataclasses.field(default_factory=list)  # [SweepRecord]
+    corridor: tuple | None = None  # (floor, cap) the stage enforced
+    kway: object | None = None   # kway.KwayStats when a "kway" stage ran
     cut_before: float = 0.0
     cut_after: float = 0.0
     seconds: float = 0.0
@@ -80,6 +92,8 @@ class PostStats:
             "unrepaired_fragments": self.unrepaired_fragments,
             "moves_applied": self.moves_applied,
             "sweeps": [dataclasses.asdict(s) for s in self.sweeps],
+            "corridor": list(self.corridor) if self.corridor else None,
+            "kway": self.kway.row() if self.kway is not None else None,
             "cut_before": self.cut_before,
             "cut_after": self.cut_after,
             "seconds": self.seconds,
@@ -106,6 +120,22 @@ def _balance_corridor(part_w: np.ndarray, balance_tol: float):
     return floor, cap
 
 
+def balance_corridor(
+    parts: np.ndarray,
+    nparts: int,
+    weights: np.ndarray | None,
+    balance_tol: float,
+) -> tuple:
+    """The (floor, cap) corridor the post chain starting at ``parts``
+    enforces.  Computed once per chain and threaded through every stage via
+    ``corridor=`` — see the module docstring for why it must not be
+    recomputed mid-chain."""
+    parts = np.asarray(parts, dtype=np.int64)
+    w = np.ones(parts.size) if weights is None else np.asarray(weights,
+                                                               np.float64)
+    return _balance_corridor(_part_weights(parts, w, nparts), balance_tol)
+
+
 def repair_components(
     graph: Graph,
     parts: np.ndarray,
@@ -113,6 +143,7 @@ def repair_components(
     *,
     weights: np.ndarray | None = None,
     balance_tol: float = 0.05,
+    corridor: tuple | None = None,
     max_rounds: int = 8,
 ) -> tuple[np.ndarray, PostStats]:
     """Reassign every disconnected fragment to its best-connected neighbor
@@ -121,6 +152,8 @@ def repair_components(
     anchoring fragment in the same round; convergence is typically 1–2
     rounds (each round strictly decreases the cut).
 
+    ``corridor`` is the post chain's fixed (floor, cap); when None (direct
+    library call outside a chain) it is computed from the incoming labels.
     Fragments with no cut edges at all (islands of a globally disconnected
     graph) are left in place — no reassignment can connect them.
     """
@@ -129,8 +162,11 @@ def repair_components(
     w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
     rows, cols, ew = graph.rows, graph.indices, graph.weights
     part_w = _part_weights(parts, w, nparts)
-    _, cap = _balance_corridor(part_w, balance_tol)
-    stats = PostStats(stages=["repair"], cut_before=edge_cut(graph, parts))
+    if corridor is None:
+        corridor = _balance_corridor(part_w, balance_tol)
+    _, cap = corridor
+    stats = PostStats(stages=["repair"], corridor=tuple(corridor),
+                      cut_before=edge_cut(graph, parts))
     t0 = time.perf_counter()
 
     deferred = 0
@@ -212,12 +248,15 @@ def refine_boundary(
     weights: np.ndarray | None = None,
     sweeps: int = 4,
     balance_tol: float = 0.05,
+    corridor: tuple | None = None,
 ) -> tuple[np.ndarray, PostStats]:
     """Greedy weighted FM-style boundary refinement (module docstring).
 
     The cut never increases: only strictly-positive-gain moves are applied,
     each under a stale-gain guard (skip if a neighbor already moved this
-    sweep) and the weight-balance corridor.
+    sweep) and the weight-balance corridor.  A candidate whose
+    best-connected target would overflow the cap falls back to the best
+    *feasible* positive-gain target.
     """
     parts = np.asarray(parts, dtype=np.int64).copy()
     n = graph.n
@@ -226,8 +265,11 @@ def refine_boundary(
     indptr, nbrs = graph.indptr, graph.indices
     part_w = _part_weights(parts, w, nparts)
     part_n = np.bincount(parts, minlength=nparts)
-    floor, cap = _balance_corridor(part_w, balance_tol)
-    stats = PostStats(stages=["refine"], cut_before=edge_cut(graph, parts))
+    if corridor is None:
+        corridor = _balance_corridor(part_w, balance_tol)
+    floor, cap = corridor
+    stats = PostStats(stages=["refine"], corridor=tuple(corridor),
+                      cut_before=edge_cut(graph, parts))
     t0 = time.perf_counter()
 
     for s in range(sweeps):
@@ -262,10 +304,18 @@ def refine_boundary(
             nb = nbrs[indptr[node]:indptr[node + 1]]
             if moved[nb].any():
                 continue  # stale gain: a neighbor changed sides this sweep
-            src, tgt, wn = int(parts[node]), int(best[k]), w[node]
-            if (part_w[tgt] + wn > cap or part_w[src] - wn < floor
-                    or part_n[src] <= 1):  # never empty a part
+            src, wn = int(parts[node]), w[node]
+            if part_w[src] - wn < floor or part_n[src] <= 1:
+                continue  # never empty or under-floor the source part
+            # Best *feasible* positive-gain target: when the argmax part
+            # would overflow the cap, fall back to the next-best part that
+            # both improves the cut and fits the corridor.
+            row = conn[k]
+            pos = np.flatnonzero(row - internal[k] > 1e-12)
+            fits = pos[part_w[pos] + wn <= cap]
+            if fits.size == 0:
                 continue
+            tgt = int(fits[np.argmax(row[fits])])
             parts[node] = tgt
             part_w[tgt] += wn
             part_w[src] -= wn
@@ -285,6 +335,29 @@ def refine_boundary(
     return parts, stats
 
 
+def close_with_repair(
+    graph: Graph,
+    parts: np.ndarray,
+    nparts: int,
+    stats: PostStats,
+    *,
+    weights: np.ndarray | None = None,
+    balance_tol: float = 0.05,
+    corridor: tuple | None = None,
+) -> tuple[np.ndarray, PostStats]:
+    """Close an FM stage with a repair pass and merge its accounting into
+    ``stats`` — the shared tail of the "refine" and "kway" stages, so the
+    two report repair activity identically."""
+    parts, r = repair_components(graph, parts, nparts, weights=weights,
+                                 balance_tol=balance_tol, corridor=corridor)
+    stats.fragments_repaired += r.fragments_repaired
+    stats.forced_moves += r.forced_moves
+    stats.unrepaired_fragments = r.unrepaired_fragments
+    stats.cut_after = r.cut_after
+    stats.seconds += r.seconds
+    return parts, stats
+
+
 def refine_stage(
     graph: Graph,
     parts: np.ndarray,
@@ -293,20 +366,20 @@ def refine_stage(
     weights: np.ndarray | None = None,
     sweeps: int = 4,
     balance_tol: float = 0.05,
+    corridor: tuple | None = None,
 ) -> tuple[np.ndarray, PostStats]:
     """The pipeline's "refine" stage: FM boundary sweeps + a closing repair
     pass, so articulation moves cannot leave a disconnected part.  Both
-    passes are cut-non-increasing, so the stage is too."""
+    passes are cut-non-increasing, so the stage is too.  One corridor
+    (computed here from the incoming labels unless the chain supplies it)
+    governs both passes."""
+    if corridor is None:
+        corridor = balance_corridor(parts, nparts, weights, balance_tol)
     parts, stats = refine_boundary(graph, parts, nparts, weights=weights,
-                                   sweeps=sweeps, balance_tol=balance_tol)
-    parts, r = repair_components(graph, parts, nparts, weights=weights,
-                                 balance_tol=balance_tol)
-    stats.fragments_repaired += r.fragments_repaired
-    stats.forced_moves += r.forced_moves
-    stats.unrepaired_fragments = r.unrepaired_fragments
-    stats.cut_after = r.cut_after
-    stats.seconds += r.seconds
-    return parts, stats
+                                   sweeps=sweeps, balance_tol=balance_tol,
+                                   corridor=corridor)
+    return close_with_repair(graph, parts, nparts, stats, weights=weights,
+                             balance_tol=balance_tol, corridor=corridor)
 
 
 def repair_refine(
@@ -317,15 +390,20 @@ def repair_refine(
     weights: np.ndarray | None = None,
     sweeps: int = 4,
     balance_tol: float = 0.05,
+    corridor: tuple | None = None,
     repair: bool = True,
     refine: bool = True,
 ) -> tuple[np.ndarray, PostStats]:
     """The default post pair — :func:`repair_components` then
     :func:`refine_stage` — composed as one call (exactly what the pipeline
-    runs for ``post=("repair", "refine")``)."""
+    runs for ``post=("repair", "refine")``).  One corridor, computed from
+    the incoming labels, governs the whole chain."""
     t0 = time.perf_counter()
-    stats = PostStats(cut_before=edge_cut(graph, parts))
-    kw = dict(weights=weights, balance_tol=balance_tol)
+    if corridor is None:
+        corridor = balance_corridor(parts, nparts, weights, balance_tol)
+    stats = PostStats(corridor=tuple(corridor),
+                      cut_before=edge_cut(graph, parts))
+    kw = dict(weights=weights, balance_tol=balance_tol, corridor=corridor)
     if repair:
         parts, r = repair_components(graph, parts, nparts, **kw)
         stats.stages.append("repair")

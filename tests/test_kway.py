@@ -1,0 +1,157 @@
+"""Hill-climbing k-way FM semantics (repro.core.kway).
+
+Hand-checkable cases for the climb/rollback contract — tentative
+negative-gain moves, rollback to the best prefix, one move per node per
+pass, the fixed balance corridor — plus the pipeline/front-door wiring of
+the "kway" stage and the KwayStats threading through PostStats.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PartitionPipeline,
+    edge_cut,
+    kway_fm,
+    kway_stage,
+    partition,
+    partition_metrics,
+    refine_boundary,
+    run_post_stages,
+)
+from repro.mesh import build_csr, dual_graph, pebble_mesh
+
+
+def pair_trap_graph():
+    """Two-part local minimum the greedy refiner cannot leave: nodes 2 and
+    3 sit in part 0, tied to each other (w=4) and to part 1 (w=2 each);
+    moving either alone loses 3, moving both gains 2.  The FM escape is a
+    negative-gain prefix: cut 4 → 7 → 2."""
+    g = build_csr(np.array([0, 2, 0, 1, 2, 3, 4]),
+                  np.array([1, 3, 2, 3, 4, 5, 5]), 6,
+                  weights=np.array([3.0, 4.0, 1.0, 1.0, 2.0, 2.0, 3.0]))
+    parts = np.array([0, 0, 0, 0, 1, 1], dtype=np.int64)
+    return g, parts
+
+
+def test_hill_climb_escapes_greedy_local_minimum():
+    g, parts = pair_trap_graph()
+    assert edge_cut(g, parts) == 4.0
+    # the greedy positive-gain refiner is stuck: every single move loses
+    out_g, st_g = refine_boundary(g, parts, 2)
+    assert st_g.moves_applied == 0
+    assert edge_cut(g, out_g) == 4.0
+    # k-way FM walks through the negative-gain ridge and keeps the prefix
+    out_k, st_k = kway_fm(g, parts, 2)
+    assert edge_cut(g, out_k) == 2.0
+    np.testing.assert_array_equal(out_k, [0, 0, 1, 1, 1, 1])
+    assert st_k.cut_after == 2.0
+    first = st_k.kway.records[0]
+    assert first.attempted == 2 and first.best_prefix == 2
+    assert first.cut_before == 4.0 and first.cut_after == 2.0
+
+
+def test_rollback_to_best_prefix():
+    """The convergence pass climbs (tentative moves > 0) but keeps nothing:
+    best-prefix index < moves attempted, and the rolled-back moves leave
+    the labels untouched."""
+    g, parts = pair_trap_graph()
+    out_k, st_k = kway_fm(g, parts, 2)
+    last = st_k.kway.records[-1]
+    assert last.attempted > 0
+    assert last.best_prefix < last.attempted
+    assert last.rolled_back == last.attempted - last.best_prefix
+    assert st_k.kway.rolled_back > 0
+    assert edge_cut(g, out_k) == min(r.cut_after for r in st_k.kway.records)
+
+
+def test_all_negative_climb_rolls_back_fully():
+    """At a true local optimum every tentative move is undone: labels and
+    cut are bit-for-bit unchanged, yet the climb was exercised."""
+    g = build_csr(np.array([0, 1, 2, 3, 4, 5, 2]),
+                  np.array([1, 2, 0, 4, 5, 3, 3]), 6,
+                  weights=np.array([2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 1.0]))
+    parts = np.array([0, 0, 0, 1, 1, 1], dtype=np.int64)
+    out, st = kway_fm(g, parts, 2, balance_tol=0.5)
+    np.testing.assert_array_equal(out, parts)
+    assert st.kway.moves_attempted > 0
+    assert st.kway.moves_kept == 0
+    assert st.cut_after == st.cut_before
+
+
+def test_one_move_per_node_per_pass():
+    """The lock array bounds every pass's tentative moves by n."""
+    g, parts = pair_trap_graph()
+    _, st = kway_fm(g, parts, 2, passes=16)
+    assert all(r.attempted <= g.n for r in st.kway.records)
+
+
+def test_kway_respects_fixed_corridor():
+    """A heavy node cannot migrate past the cap even for a large gain."""
+    src = np.array([0, 1, 2, 3, 4, 5, 2])
+    dst = np.array([1, 2, 0, 4, 5, 3, 3])
+    w = np.array([1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 10.0])
+    g = build_csr(src, dst, 6, weights=w)
+    parts = np.array([0, 0, 0, 1, 1, 1], dtype=np.int64)
+    out, st = kway_fm(g, parts, 2, balance_tol=0.05)
+    # cap = 3.15: any move overfills one side, so nothing can be KEPT;
+    # the labels come back unchanged
+    np.testing.assert_array_equal(out, parts)
+    part_w = np.bincount(out, minlength=2).astype(float)
+    assert part_w.max() <= st.corridor[1] + 1e-9
+
+
+def test_kway_stage_closes_with_repair():
+    """The registered stage repairs articulation damage: 0 disconnected
+    parts at a cut no worse than the input's."""
+    mesh = pebble_mesh(8, 8, 8, n_pebbles=3, seed=2)
+    g = dual_graph(mesh)
+    rng = np.random.default_rng(0)
+    parts = rng.integers(0, 4, g.n).astype(np.int64)
+    parts[rng.choice(g.n, 4, replace=False)] = np.arange(4)
+    out, st = kway_stage(g, parts, 4, weights=mesh.weights)
+    pm = partition_metrics(g, out, 4, weights=mesh.weights)
+    assert pm.disconnected_parts == 0
+    assert st.cut_after <= st.cut_before + 1e-9
+    assert st.cut_after == pytest.approx(edge_cut(g, out))
+
+
+def test_pipeline_repair_kway_chain():
+    """refine="repair+kway" through the front door: stages recorded, stats
+    threaded into the report, invariants hold, cut ≤ raw bisection's."""
+    mesh = pebble_mesh(8, 8, 8, n_pebbles=3, seed=1)
+    g = dual_graph(mesh)
+    pipe = PartitionPipeline(post=("repair", "kway"),
+                             bisect_kw=dict(tol=1e-2, max_restarts=10))
+    ctx = pipe.run(mesh, 8)
+    assert ctx.report.post.stages == ["repair", "kway"]
+    assert ctx.report.post.kway is not None
+    assert ctx.report.post.kway.passes >= 1
+    assert ctx.report.post.corridor is not None
+    pm = partition_metrics(g, ctx.parts, 8, weights=mesh.weights)
+    pm_raw = partition_metrics(g, ctx.parts_raw, 8, weights=mesh.weights)
+    assert pm.edge_cut <= pm_raw.edge_cut + 1e-9
+    assert pm.disconnected_parts == 0
+    # the kway section rides through the JSON row for the bench tables
+    row = ctx.report.post.row()
+    assert row["kway"]["passes"] == ctx.report.post.kway.passes
+    assert row["corridor"] is not None
+    # ... and the front door accepts the spec
+    labels = partition(mesh, 8, refine="repair+kway", tol=1e-2,
+                       max_restarts=10)
+    assert partition_metrics(g, labels, 8).disconnected_parts == 0
+
+
+def test_run_post_stages_greedy_vs_kway_one_solve():
+    """What the benchmarks do: two post chains from one bisection, kway at
+    or below greedy on this mesh (the smoke gate's cut axis)."""
+    mesh = pebble_mesh(8, 8, 8, n_pebbles=3, seed=0)
+    g = dual_graph(mesh)
+    ctx = PartitionPipeline(bisect_kw=dict(tol=1e-2)).run(mesh, 8)
+    greedy_cut = partition_metrics(g, ctx.parts, 8).edge_cut
+    parts_k, stats, recs = run_post_stages(
+        g, ctx.parts_raw, 8, ("repair", "kway"), weights=ctx.weights)
+    kway_cut = partition_metrics(g, parts_k, 8).edge_cut
+    assert kway_cut <= greedy_cut + 1e-9
+    assert [r.name for r in recs] == ["repair", "kway"]
+    assert stats.kway is not None

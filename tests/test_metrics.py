@@ -3,7 +3,8 @@
 import numpy as np
 
 from repro.core import comm_time_model, m2_words, partition_metrics
-from repro.mesh import grid_graph_2d
+from repro.core.metrics import BETA_S_PER_WORD
+from repro.mesh import build_csr, grid_graph_2d
 
 
 def test_metrics_two_halves():
@@ -41,6 +42,25 @@ def test_comm_time_model_regimes():
     assert ct["m2_words"] == m2_words()
     # paper's argument: m2 for a 50 GB/s link at 1 µs latency ≈ 6k words
     assert 1e3 < m2_words() < 1e4
+
+
+def test_comm_model_volume_is_per_part_max():
+    """W must be the max over parts of the part's OWN outgoing volume in
+    words — not max_message_size × max_neighbors, which mixes maxima from
+    different parts.  Star part p0 has the most neighbors (3, tiny
+    messages); p1/p2 carry the big messages (volume 10 words each)."""
+    g = build_csr(np.array([0, 0, 0, 1]), np.array([1, 2, 3, 2]), 4,
+                  weights=np.array([1.0, 1.0, 1.0, 9.0]))
+    parts = np.array([0, 1, 2, 3], dtype=np.int64)
+    m = partition_metrics(g, parts, 4, dofs_per_face=4)  # words == volume
+    assert m.max_neighbors == 3          # p0
+    assert m.max_message_size == 5.0     # p1/p2: 10 words over 2 neighbors
+    # hand-computed per-part outgoing words: p0=3, p1=10, p2=10, p3=1
+    assert m.max_part_volume_words == 10.0
+    ct = comm_time_model(m)
+    assert ct["volume_s"] == BETA_S_PER_WORD * 10.0
+    # the old cross-part estimate would have claimed 5 × 3 = 15 words
+    assert m.max_message_size * m.max_neighbors == 15.0
 
 
 def test_single_part_degenerate():

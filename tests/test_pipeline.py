@@ -144,16 +144,24 @@ def test_parse_refine():
     assert parse_refine("none") == ()
     assert parse_refine("repair") == ("repair",)
     assert parse_refine(("refine",)) == ("refine",)
+    assert parse_refine("kway") == ("kway",)
+    assert parse_refine("repair+kway") == ("repair", "kway")
 
 
 def test_presets(box):
     m, _ = box
     assert set(PIPELINE_PRESETS) >= {"default", "raw", "quality",
-                                     "geometric", "reference"}
+                                     "geometric", "reference", "kway",
+                                     "quality-kway"}
     raw = make_pipeline("raw")
     assert raw.post == ()
     q = make_pipeline("quality")
     assert q.post_kw["sweeps"] == 8 and q.pre == "rib"
+    k = make_pipeline("kway")
+    assert k.post == ("repair", "kway") and k.post_kw["passes"] == 8
+    qk = make_pipeline("quality-kway")
+    assert qk.post == ("repair", "kway")
+    assert qk.post_kw["passes"] == 12 and qk.post_kw["balance_tol"] == 0.03
     # overrides merge
     q2 = make_pipeline("quality", post_kw=dict(sweeps=2))
     assert q2.post_kw["sweeps"] == 2 and q2.post_kw["balance_tol"] == 0.03

@@ -11,11 +11,13 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    balance_corridor,
     edge_cut,
     partition_metrics,
     refine_boundary,
     repair_components,
     repair_refine,
+    run_post_stages,
 )
 from repro.mesh import build_csr, grid_graph_2d
 
@@ -106,6 +108,76 @@ def test_refine_alone_never_worsens(n, extra, nparts, seed):
     assert edge_cut(g, out) <= cut0 + 1e-9
     for s in stats.sweeps:
         assert s.cut_after <= s.cut_before + 1e-9
+
+
+@_property
+def test_kway_stage_invariants_random_connected(n, extra, nparts, seed):
+    """The "kway" chain obeys the same contract as the greedy chain: cut
+    non-increasing, zero disconnected parts, corridor held when no move
+    was forced by connectivity — from arbitrary labels."""
+    g = random_connected_graph(n, extra, seed)
+    rng = np.random.default_rng(seed + 2)
+    parts = rng.integers(0, nparts, n).astype(np.int64)
+    parts[rng.choice(n, nparts, replace=False)] = np.arange(nparts)
+    w = rng.integers(1, 4, n).astype(np.float64)
+    tol = 0.1
+    cut0 = edge_cut(g, parts)
+    corridor0 = balance_corridor(parts, nparts, w, tol)
+
+    out, stats, _ = run_post_stages(g, parts, nparts, ("repair", "kway"),
+                                    weights=w,
+                                    post_kw=dict(balance_tol=tol))
+
+    assert stats.cut_after <= cut0 + 1e-9
+    assert stats.cut_after == pytest.approx(edge_cut(g, out))
+    pm = partition_metrics(g, out, nparts, weights=w)
+    assert pm.disconnected_parts == 0
+    assert pm.component_count == nparts
+    assert stats.corridor == pytest.approx(corridor0)
+    part_w = np.bincount(out, weights=w, minlength=nparts)
+    if stats.forced_moves == 0:
+        assert part_w.max() <= corridor0[1] + 1e-9
+    assert set(np.unique(out)) == set(range(nparts))
+
+
+def test_second_best_feasible_target_moves():
+    """When the best-connected target overflows the cap but a second-best
+    part has positive gain and fits, the node must move there (the old
+    refiner considered only argmax and skipped the node outright)."""
+    # node 0 (p0): conn 5 → p1 (over cap), conn 3 → p2 (fits), internal 1
+    g = build_csr(np.array([0, 0, 0, 2, 4]), np.array([1, 2, 4, 3, 5]), 6,
+                  weights=np.array([1.0, 5.0, 3.0, 1.0, 1.0]))
+    parts = np.array([0, 0, 1, 1, 2, 2], dtype=np.int64)
+    w = np.array([1.0, 3.0, 2.0, 2.0, 1.0, 1.0])
+    # corridor: cap = max(1.05·8/3, 4) = 4 → p1 (4+1) overflows, p2 (2+1)
+    # fits; gains: +4 to p1 (infeasible), +2 to p2 (feasible)
+    out, stats = refine_boundary(g, parts, 3, weights=w, balance_tol=0.05)
+    assert out[0] == 2
+    assert stats.moves_applied == 1
+    assert edge_cut(g, out) == 6.0  # 8 − the applied gain of 2
+
+
+def test_corridor_fixed_across_chained_stages():
+    """A cap-exceeding forced repair move must NOT widen the corridor the
+    later stages enforce: every stage in one chain records the corridor
+    computed from the chain's INITIAL part weights."""
+    # fragment: node 5 labeled p0 but only adjacent to p1 = {3, 4}, which
+    # sits exactly at the cap → repair's move is forced over the cap
+    g = build_csr(np.array([0, 5, 3, 6]), np.array([1, 3, 4, 7]), 8)
+    parts = np.array([0, 0, 2, 1, 1, 0, 2, 2], dtype=np.int64)
+    w = np.array([1.0, 1.0, 1e-4, 1.5, 1.5, 1.0, 1.0, 1.0])
+    corridor0 = balance_corridor(parts, 3, w, 0.05)
+
+    out, stats, recs = run_post_stages(g, parts, 3, ("repair", "refine"),
+                                       weights=w)
+
+    assert stats.forced_moves == 1       # the fragment move exceeded cap
+    assert out[5] == 1
+    corridors = [r.info["corridor"] for r in recs]
+    assert corridors[0] == pytest.approx(corridor0)
+    # the widened post-repair weights must not leak into later stages
+    assert corridors[1] == corridors[0]
+    assert stats.corridor == pytest.approx(corridor0)
 
 
 def test_repair_reassigns_to_max_shared_weight():
