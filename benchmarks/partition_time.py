@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.bench_util import emit
+from benchmarks.bench_util import emit, report_cols, stage_seconds
 from repro.core import PartitionPipeline, partition_metrics, run_post_stages
 from repro.dist.partition_aware import plan_halo_sharding
 from repro.mesh import dual_graph, pebble_mesh
@@ -63,16 +63,17 @@ def run(
     rows = []
 
     def record(parts, seconds, *, engine, method, pre, report, refine,
-               post_seconds=0.0):
+               post_seconds=0.0, stages=None):
         pm = partition_metrics(graph, parts, nparts, weights=mesh.weights)
         halo = plan_halo_sharding(graph, parts, nparts).halo
-        rows.append({
+        cols = report_cols(report)
+        row = {
             "engine": engine,
             "method": method, "pre": pre or "none",
-            "precond": report.precond,
-            "precond_levels": report.precond_levels,
+            "precond": cols["precond"],
+            "precond_levels": cols["precond_levels"],
             "refine": refine, "post_seconds": post_seconds,
-            "seconds": seconds, "iters": report.total_iterations,
+            "seconds": seconds, "iters": cols["iters"],
             "levels": len(report.levels),
             "cut": pm.edge_cut,
             "max_nbrs": pm.max_neighbors,
@@ -82,14 +83,17 @@ def run(
             "volume": pm.total_volume,
             "halo": halo,
             "disconnected": pm.disconnected_parts,
-        })
+        }
+        if stages is not None:
+            row["stages"] = stages   # per-stage wall from the run's trace
+        rows.append(row)
         emit(
             f"{emit_prefix}/{engine}/{method}/pre={pre or 'none'}"
-            f"/precond={report.precond}/refine={refine}",
+            f"/precond={cols['precond']}/refine={refine}",
             seconds * 1e6,
             f"E={mesh.nelems};P={nparts};"
-            f"iters={report.total_iterations};"
-            f"mlv={report.precond_levels};"
+            f"iters={cols['iters']};"
+            f"mlv={cols['precond_levels']};"
             f"cut={pm.edge_cut:.0f};max_nbrs={pm.max_neighbors};"
             f"avg_nbrs={pm.avg_neighbors:.1f};"
             f"w_imb={pm.weighted_imbalance:.3f};halo={halo};"
@@ -122,7 +126,8 @@ def run(
                            refine="none")
                     record(ctx.parts, dt, engine=engine, method=method,
                            pre=pre, report=ctx.report,
-                           refine="repair+refine", post_seconds=post_dt)
+                           refine="repair+refine", post_seconds=post_dt,
+                           stages=stage_seconds(ctx))
                     # Greedy-vs-kway axis from the SAME solve: re-run the
                     # k-way FM chain on parts_raw (no second eigensolve).
                     t1 = time.perf_counter()

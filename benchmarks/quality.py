@@ -21,7 +21,7 @@ import time
 
 import numpy as np
 
-from benchmarks.bench_util import emit
+from benchmarks.bench_util import emit, report_cols, stage_seconds
 from repro.core import (PartitionPipeline, partition, partition_metrics,
                         run_post_stages)
 from repro.dist.partition_aware import plan_halo_sharding
@@ -36,7 +36,7 @@ def run(dims=(12, 12, 12), nparts=16, full: bool = False) -> list:
     rows = []
 
     def record(name, parts, dt, engine="-", report=None, refine="none",
-               post_seconds=0.0):
+               post_seconds=0.0, stages=None):
         pm = partition_metrics(graph, parts, nparts)
         halo = plan_halo_sharding(graph, parts, nparts).halo
         row = {"name": name, "engine": engine, "seconds": dt,
@@ -49,15 +49,16 @@ def run(dims=(12, 12, 12), nparts=16, full: bool = False) -> list:
         if report is not None:
             # Solver provenance: geometric pre-pass, preconditioner family,
             # multilevel hierarchy depth, and total iteration count.
-            row.update({"pre": report.pre, "precond": report.precond,
-                        "precond_levels": report.precond_levels,
-                        "iters": report.total_iterations})
+            cols = report_cols(report)
+            row.update(cols)
+        if stages is not None:
+            row["stages"] = stages   # per-stage wall from the run's trace
         rows.append(row)
         extra = ""
         if report is not None:
-            extra = (f";pre={report.pre};precond={report.precond};"
-                     f"mlv={report.precond_levels};"
-                     f"iters={report.total_iterations}")
+            extra = (f";pre={cols['pre']};precond={cols['precond']};"
+                     f"mlv={cols['precond_levels']};"
+                     f"iters={cols['iters']}")
         emit(
             f"quality/{name}", dt * 1e6,
             f"cut={pm.edge_cut:.0f};volume={pm.total_volume:.0f};"
@@ -81,7 +82,8 @@ def run(dims=(12, 12, 12), nparts=16, full: bool = False) -> list:
             suffix = "" if engine == "batched" else "_recursive"
             record(f"rsb_{lap}{suffix}", ctx.parts, dt, engine=engine,
                    report=ctx.report, refine="repair+refine",
-                   post_seconds=ctx.report.post.seconds)
+                   post_seconds=ctx.report.post.seconds,
+                   stages=stage_seconds(ctx))
             if engine == "batched" and lap == "weighted":
                 # Same bisection, post stage stripped: parts_raw is free.
                 record("rsb_weighted_raw", ctx.parts_raw,

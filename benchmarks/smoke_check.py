@@ -40,6 +40,19 @@ quantity with the same estimator and the headroom covers regressions,
 not measurement noise.
 The summed wall clock counts each solve once (refined rows only when the
 refine axis is present).
+
+Observability gates (repro.obs) ride on the same invocation:
+
+  * every run writes a JSONL run manifest + a Chrome/Perfetto trace for a
+    representative quality-kway pipeline run and VALIDATES the manifest —
+    a missing stage span (someone deleted or renamed an `obs.timed` call)
+    fails the gate: the drift guard that keeps the traces trustworthy;
+  * the per-stage wall SHARES of the warm rows are gated against the
+    baseline's recorded `stages` maps: any stage whose share of the row
+    wall grew by more than 15 percentage points fails (a stage silently
+    eating the pipeline is exactly what total-wall headroom hides).  The
+    trace JSON is uploaded as a CI artifact (see .github/workflows/ci.yml)
+    so a regression comes with its own flamegraph.
 """
 
 from __future__ import annotations
@@ -54,6 +67,7 @@ TOLERANCE = 1.10       # per-row: fail if cut > 110% of baseline
 WALL_TOLERANCE = 1.25  # total: fail if summed seconds > 125% of baseline
 POST_FRACTION = 0.15   # greedy post wall clock ≤ 15% of the summed total
 KWAY_POST_FRACTION = 0.25  # summed kway post ≤ 25% of summed kway row wall
+STAGE_SHARE_TOLERANCE = 0.15  # per-stage share of wall may grow ≤ 15 points
 
 
 def _key(row) -> tuple:
@@ -124,9 +138,67 @@ def check_refine_invariants(rows, warm_rows=None) -> list:
     return failures
 
 
+def check_stage_shares(rows, base_rows) -> list:
+    """Per-stage wall-share gate: for rows matched on the smoke key, no
+    stage's share of that row's summed stage wall may exceed the
+    baseline's share by more than STAGE_SHARE_TOLERANCE (absolute).
+    Shares, not seconds — runner speed cancels out; a stage quietly
+    growing from 5% to 40% of the pipeline does not.  Rows without a
+    recorded ``stages`` map (pre-obs baselines) are skipped."""
+    failures = []
+    base_by_key = {_key(r): r for r in base_rows if r.get("stages")}
+    for row in rows:
+        if not row.get("stages"):
+            continue
+        base = base_by_key.get(_key(row))
+        if base is None:
+            continue
+        total = sum(row["stages"].values())
+        base_total = sum(base["stages"].values())
+        if total <= 0 or base_total <= 0:
+            continue
+        for stage, secs in row["stages"].items():
+            share = secs / total
+            base_share = base["stages"].get(stage, 0.0) / base_total
+            if share > base_share + STAGE_SHARE_TOLERANCE:
+                failures.append(
+                    f"stage {stage} is {share:.0%} of wall vs baseline "
+                    f"{base_share:.0%} for {_key(row)}")
+    return failures
+
+
+def check_manifest(manifest_path: str, trace_path: str) -> list:
+    """Write + validate a run manifest for a representative quality-kway
+    pipeline run — the drift guard.  A deleted/renamed stage span, an
+    empty trace, or a manifest that fails schema validation returns
+    failure messages; the Perfetto trace JSON lands at ``trace_path``
+    (the CI artifact)."""
+    from repro import obs
+    from repro.core import PartitionPipeline
+    from repro.mesh import pebble_mesh
+
+    if not obs.obs_enabled():
+        return ["REPRO_OBS is off — the smoke gate needs the trace "
+                "(unset REPRO_OBS or set it to 'on')"]
+    mesh = pebble_mesh(8, 8, 8, n_pebbles=3, seed=0)
+    ctx = PartitionPipeline(pre="rcb", bisect="rsb-batched",
+                            post=("repair", "kway")).run(mesh, 8)
+    if ctx.trace is None:
+        return ["pipeline run recorded no trace despite REPRO_OBS=on"]
+    ctx.export_manifest(manifest_path, name="smoke-quality-kway")
+    ctx.export_trace_events(trace_path)
+    problems = obs.validate_manifest(manifest_path)
+    print(f"manifest {manifest_path} "
+          f"({'OK' if not problems else 'INVALID'}), "
+          f"trace {trace_path}", file=sys.stderr)
+    return problems
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_partition.json")
+    ap.add_argument("--manifest", default="runs/smoke_manifest.jsonl")
+    ap.add_argument("--trace", default="runs/smoke_trace.json")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -162,6 +234,17 @@ def main() -> int:
 
     for msg in check_refine_invariants(rows, warm):
         print(f"REFINE-GATE {msg}", file=sys.stderr)
+        failed = True
+
+    # Per-stage wall shares: warm rows against the baseline's stage maps.
+    for msg in check_stage_shares(warm, base_rows):
+        print(f"STAGE-GATE {msg}", file=sys.stderr)
+        failed = True
+
+    # Observability drift guard: manifest must exist, validate, and carry
+    # every stage span the recorded config implies.
+    for msg in check_manifest(args.manifest, args.trace):
+        print(f"OBS-GATE {msg}", file=sys.stderr)
         failed = True
 
     base_wall = sum(r["seconds"] for r in _wall_rows(base_rows))

@@ -6,6 +6,7 @@ partitioners compared (RSB / RCB / RIB / SFC / random).
 
 import numpy as np
 
+from repro import obs
 from repro.core import (PartitionPipeline, partition, partition_metrics,
                         run_post_stages)
 from repro.dist.partition_aware import plan_halo_sharding, scatter_features
@@ -43,3 +44,8 @@ plan = plan_halo_sharding(graph, ctx)
 blocks = scatter_features(plan, mesh.coords)
 print(f"\nredistributed coords into {blocks.shape} per-rank blocks "
       f"(halo capacity {plan.halo} elements/rank)")
+
+# where the wall clock went: the pipeline run's span tree (name, ms, % of
+# wall, counters) — obs.render of the trace PartitionPipeline recorded
+print("\nrsb pipeline trace (% of wall):")
+print(obs.render(ctx.trace))

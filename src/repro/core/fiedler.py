@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.obs import jaxprof
 from repro.core.amg import amg_setup, amg_setup_batched, coarsen_graph
 from repro.core.gather_scatter import GSHandle, GSLaplacian, gs_setup, _build
 from repro.core.inverse_iteration import inverse_iteration, inverse_iteration_batched
@@ -58,6 +60,22 @@ class FiedlerResult:
     iterations: int        # restarts (lanczos) or outer iters (inverse)
     method: str
     levels: int = 0        # multilevel warm-start hierarchy depth (0 = none)
+
+
+def _emit_fiedler_metrics(results) -> None:
+    """Emit solver counters/gauges for completed solves into the active
+    obs span (no-op outside a trace — counter_add early-outs)."""
+    for r in results:
+        if r is None:
+            continue
+        obs.counter_add("fiedler_solves")
+        if r.method == "lanczos":
+            obs.counter_add("lanczos_restarts", r.iterations)
+        elif r.method == "inverse":
+            obs.counter_add("inverse_outer_iters", r.iterations)
+        obs.gauge_max("residual_max", float(r.residual))
+        if r.levels:
+            obs.gauge_max("multilevel_levels", r.levels)
 
 
 # ---------------------------------------------------------------------------
@@ -301,7 +319,9 @@ def fiedler_from_graph(
     n = graph.n
     if n <= _DENSE_CUTOFF:
         vec, lam = _dense_fiedler(dense_laplacian_np(graph))
-        return FiedlerResult(vec, lam, 0.0, 0, "dense")
+        res = FiedlerResult(vec, lam, 0.0, 0, "dense")
+        _emit_fiedler_metrics([res])
+        return res
 
     ml_levels = 0
     if warm is None and multilevel:
@@ -324,31 +344,37 @@ def fiedler_from_graph(
     if method == "lanczos":
         # Pass the operator dataclass itself (a pytree): the window trace
         # is shared across same-shape operators instead of per instance.
-        y, info = lanczos_fiedler(
-            op, n_pad, mask=mask, key=jax.random.PRNGKey(seed), b0=b0,
-            window=window, max_restarts=max_restarts, tol=tol,
-        )
+        with jaxprof.annotate("fiedler:lanczos"):
+            y, info = lanczos_fiedler(
+                op, n_pad, mask=mask, key=jax.random.PRNGKey(seed), b0=b0,
+                window=window, max_restarts=max_restarts, tol=tol,
+            )
         iters = info.restarts
         lam, res = info.eigenvalue, info.residual
     elif method == "inverse":
         pre = amg_setup(graph, order=order)
         ml_levels = max(ml_levels, len(pre.ops))
+        obs.gauge_max("amg_levels", len(pre.ops))
 
         # AMG hierarchy is sized to the real graph; wrap to ignore padding.
         def precond(r):
             u = pre(r[:n])
             return jnp.pad(u, (0, n_pad - n))
 
-        y, info = inverse_iteration(
-            op.apply, n_pad, precond=precond, mask=mask,
-            key=jax.random.PRNGKey(seed), b0=b0, tol=tol,
-        )
+        with jaxprof.annotate("fiedler:inverse"):
+            y, info = inverse_iteration(
+                op.apply, n_pad, precond=precond, mask=mask,
+                key=jax.random.PRNGKey(seed), b0=b0, tol=tol,
+            )
         iters = info.outer_iters
         lam, res = info.eigenvalue, info.residual
+        obs.counter_add("cg_inner_iters", float(np.sum(info.inner_iters)))
     else:
         raise ValueError(f"unknown fiedler method: {method}")
-    return FiedlerResult(np.asarray(y[:n]), lam, res, iters, method,
-                         levels=ml_levels)
+    out = FiedlerResult(np.asarray(y[:n]), lam, res, iters, method,
+                        levels=ml_levels)
+    _emit_fiedler_metrics([out])
+    return out
 
 
 def fiedler_from_mesh(
@@ -378,7 +404,9 @@ def fiedler_from_mesh(
     if E <= _DENSE_CUTOFF:
         g = dual_graph_from_incidence(vert_gid, int(vert_gid.max()) + 1, E)
         vec, lam = _dense_fiedler(dense_laplacian_np(g))
-        return FiedlerResult(vec, lam, 0.0, 0, "dense")
+        res = FiedlerResult(vec, lam, 0.0, 0, "dense")
+        _emit_fiedler_metrics([res])
+        return res
 
     ml_levels = 0
     if warm is None and multilevel:
@@ -398,30 +426,36 @@ def fiedler_from_mesh(
         b0 = jnp.asarray(_noise_b0(seed, n_pad))
 
     if method == "lanczos":
-        y, info = lanczos_fiedler(
-            op, n_pad, mask=mask, key=jax.random.PRNGKey(seed), b0=b0,
-            window=window, max_restarts=max_restarts, tol=tol,
-        )
+        with jaxprof.annotate("fiedler:lanczos"):
+            y, info = lanczos_fiedler(
+                op, n_pad, mask=mask, key=jax.random.PRNGKey(seed), b0=b0,
+                window=window, max_restarts=max_restarts, tol=tol,
+            )
         iters, lam, res = info.restarts, info.eigenvalue, info.residual
     elif method == "inverse":
         if graph_for_amg is None:
             raise ValueError("inverse iteration needs the assembled dual graph for AMG")
         pre = amg_setup(graph_for_amg, order=order)
         ml_levels = max(ml_levels, len(pre.ops))
+        obs.gauge_max("amg_levels", len(pre.ops))
 
         def precond(r):
             u = pre(r[:E])
             return jnp.pad(u, (0, n_pad - E))
 
-        y, info = inverse_iteration(
-            op.apply, n_pad, precond=precond, mask=mask,
-            key=jax.random.PRNGKey(seed), b0=b0, tol=tol,
-        )
+        with jaxprof.annotate("fiedler:inverse"):
+            y, info = inverse_iteration(
+                op.apply, n_pad, precond=precond, mask=mask,
+                key=jax.random.PRNGKey(seed), b0=b0, tol=tol,
+            )
         iters, lam, res = info.outer_iters, info.eigenvalue, info.residual
+        obs.counter_add("cg_inner_iters", float(np.sum(info.inner_iters)))
     else:
         raise ValueError(f"unknown fiedler method: {method}")
-    return FiedlerResult(np.asarray(y[:E]), lam, res, iters, method,
-                         levels=ml_levels)
+    out = FiedlerResult(np.asarray(y[:E]), lam, res, iters, method,
+                        levels=ml_levels)
+    _emit_fiedler_metrics([out])
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -579,6 +613,7 @@ def _solve_inverse_buckets(results, solve_ix, size_of, bucket_key, build_op,
         if precond == "amg":
             pre = amg_setup_batched([graph_of(i) for i in ix], n_pad, b_pad)
             pre_levels = len(pre.ops)
+            obs.gauge_max("amg_levels", pre_levels)
         mask = np.zeros((b_pad, n_pad), dtype=np.float32)
         for r, i in enumerate(ix):
             mask[r, : size_of(i)] = 1.0
@@ -586,9 +621,13 @@ def _solve_inverse_buckets(results, solve_ix, size_of, bucket_key, build_op,
             [size_of(i) for i in ix], [seeds[i] for i in ix],
             [warms[i] for i in ix], n_pad, b_pad,
         )
-        Y, info = inverse_iteration_batched(
-            op, n_pad, mask=jnp.asarray(mask), b0=b0, tol=tol, precond=pre
-        )
+        with jaxprof.annotate(f"fiedler:inverse_batched:n{n_pad}xb{b_pad}"):
+            Y, info = inverse_iteration_batched(
+                op, n_pad, mask=jnp.asarray(mask), b0=b0, tol=tol, precond=pre
+            )
+        obs.counter_add(
+            "cg_inner_iters",
+            float(sum(np.asarray(c).sum() for c in info.inner_iters)))
         Yh = np.asarray(Y)
         for r, i in enumerate(ix):
             results[i] = FiedlerResult(
@@ -600,10 +639,11 @@ def _solve_inverse_buckets(results, solve_ix, size_of, bucket_key, build_op,
 
 def _solve_packed_lanczos(op, offs, N, n_seg, seg, mask, b0, sizes,
                           tol, window, max_restarts):
-    Y, info = lanczos_fiedler_batched(
-        op, N, seg=jnp.asarray(seg), n_seg=n_seg, mask=jnp.asarray(mask),
-        b0=b0, window=window, max_restarts=max_restarts, tol=tol,
-    )
+    with jaxprof.annotate(f"fiedler:lanczos_packed:N{N}"):
+        Y, info = lanczos_fiedler_batched(
+            op, N, seg=jnp.asarray(seg), n_seg=n_seg, mask=jnp.asarray(mask),
+            b0=b0, window=window, max_restarts=max_restarts, tol=tol,
+        )
     Yh = np.asarray(Y)
     return [
         FiedlerResult(
@@ -661,6 +701,7 @@ def fiedler_from_graph_batched(
         else:
             solve_ix.append(i)
     if not solve_ix:
+        _emit_fiedler_metrics(results)
         return results
 
     ml_levels = {i: 0 for i in solve_ix}
@@ -692,6 +733,7 @@ def fiedler_from_graph_batched(
         for r, i in enumerate(solve_ix):
             results[i] = packed[r]
             results[i].levels = ml_levels[i]
+        _emit_fiedler_metrics(results)
         return results
 
     if method != "inverse":
@@ -716,6 +758,7 @@ def fiedler_from_graph_batched(
     )
     for i in solve_ix:  # deepest hierarchy used: warm start or AMG ladder
         results[i].levels = max(results[i].levels, ml_levels[i])
+    _emit_fiedler_metrics(results)
     return results
 
 
@@ -769,6 +812,7 @@ def fiedler_from_mesh_batched(
         else:
             solve_ix.append(i)
     if not solve_ix:
+        _emit_fiedler_metrics(results)
         return results
 
     ml_levels = {i: 0 for i in solve_ix}
@@ -792,6 +836,7 @@ def fiedler_from_mesh_batched(
         for r, i in enumerate(solve_ix):
             results[i] = packed[r]
             results[i].levels = ml_levels[i]
+        _emit_fiedler_metrics(results)
         return results
 
     if method != "inverse":
@@ -806,6 +851,7 @@ def fiedler_from_mesh_batched(
     )
     for i in solve_ix:  # deepest hierarchy used: warm start or AMG ladder
         results[i].levels = max(results[i].levels, ml_levels[i])
+    _emit_fiedler_metrics(results)
     return results
 
 

@@ -54,9 +54,10 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import time
 
 import numpy as np
+
+from repro import obs
 
 from repro.core.refine import (
     PostStats,
@@ -102,6 +103,18 @@ class KwayStats:
             "records": [dataclasses.asdict(r) for r in self.records],
         }
 
+    def to_dict(self) -> dict:
+        return self.row()
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KwayStats":
+        s = cls(passes=d.get("passes", 0),
+                moves_attempted=d.get("moves_attempted", 0),
+                moves_kept=d.get("moves_kept", 0),
+                rolled_back=d.get("rolled_back", 0))
+        s.records = [KwayPassRecord(**r) for r in d.get("records", [])]
+        return s
+
 
 def kway_fm(
     graph: Graph,
@@ -139,136 +152,140 @@ def kway_fm(
     kstats = KwayStats()
     stats = PostStats(stages=["kway"], corridor=(floor, cap), kway=kstats,
                       cut_before=edge_cut(graph, parts_np))
-    t0 = time.perf_counter()
-    cut = stats.cut_before
-    if stall is None:
-        stall = max(64, n // 8)
+    with obs.timed("kway_fm") as t:
+        cut = stats.cut_before
+        if stall is None:
+            stall = max(64, n // 8)
 
-    # Plain-Python mirrors of the mutable state (module docstring: scalar
-    # updates beat numpy dispatch at degree-sized granularity).
-    parts_l = parts_np.tolist()
-    w_l = w_np.tolist()
-    part_w = part_w_np.tolist()
-    part_n = np.bincount(parts_np, minlength=nparts).tolist()
-    nbrs_l, ew_l, off = nbrs.tolist(), ew.tolist(), indptr.tolist()
-    adj = [list(zip(nbrs_l[off[i]:off[i + 1]], ew_l[off[i]:off[i + 1]]))
-           for i in range(n)]
-    prange = range(nparts)
+        # Plain-Python mirrors of the mutable state (module docstring: scalar
+        # updates beat numpy dispatch at degree-sized granularity).
+        parts_l = parts_np.tolist()
+        w_l = w_np.tolist()
+        part_w = part_w_np.tolist()
+        part_n = np.bincount(parts_np, minlength=nparts).tolist()
+        nbrs_l, ew_l, off = nbrs.tolist(), ew.tolist(), indptr.tolist()
+        adj = [list(zip(nbrs_l[off[i]:off[i + 1]], ew_l[off[i]:off[i + 1]]))
+               for i in range(n)]
+        prange = range(nparts)
 
-    for pass_no in range(passes):
-        # Dense per-(node, part) connection table, one vectorized build,
-        # then scalar increments only.
-        conn_np = np.zeros((n, nparts))
-        np.add.at(conn_np, (rows, parts_np[graph.indices]), ew)
-        conn = conn_np.tolist()
-        locked = [False] * n
-        ver = [0] * n   # conn-row version stamps
-        heap: list = []
-        seq = 0  # FIFO tiebreak keeps equal-gain pops deterministic
+        for pass_no in range(passes):
+            # Dense per-(node, part) connection table, one vectorized build,
+            # then scalar increments only.
+            conn_np = np.zeros((n, nparts))
+            np.add.at(conn_np, (rows, parts_np[graph.indices]), ew)
+            conn = conn_np.tolist()
+            locked = [False] * n
+            ver = [0] * n   # conn-row version stamps
+            heap: list = []
+            seq = 0  # FIFO tiebreak keeps equal-gain pops deterministic
 
-        def push(i: int):
-            """Push node i's best feasible adjacent target (exact gain
-            from the live conn row; ties → lighter part), stamped with the
-            row's current version."""
-            nonlocal seq
-            row = conn[i]
-            src = parts_l[i]
-            wi = w_l[i]
-            own = row[src]
-            best_g = None
-            best_t = -1
-            best_w = 0.0
-            for q in prange:
-                c = row[q]
-                if c <= _EPS or q == src or part_w[q] + wi > cap_slack:
+            def push(i: int):
+                """Push node i's best feasible adjacent target (exact gain
+                from the live conn row; ties → lighter part), stamped with the
+                row's current version."""
+                nonlocal seq
+                row = conn[i]
+                src = parts_l[i]
+                wi = w_l[i]
+                own = row[src]
+                best_g = None
+                best_t = -1
+                best_w = 0.0
+                for q in prange:
+                    c = row[q]
+                    if c <= _EPS or q == src or part_w[q] + wi > cap_slack:
+                        continue
+                    g = c - own
+                    if (best_g is None or g > best_g + _EPS
+                            or (g > best_g - _EPS and part_w[q] < best_w)):
+                        best_g, best_t, best_w = g, q, part_w[q]
+                if best_g is not None:
+                    heapq.heappush(heap, (-best_g, seq, i, best_t, ver[i]))
+                    seq += 1
+
+            total = np.bincount(rows, weights=ew, minlength=n)
+            own_all = conn_np[np.arange(n), parts_np]
+            for i in np.flatnonzero(total - own_all > _EPS).tolist():
+                push(i)  # boundary frontier
+
+            move_log: list = []   # (node, src, tgt, gain)
+            run_cut = best_cut = cut
+            best_idx = 0
+            pops, max_pops = 0, 50 * n + 1000  # lazy-heap runaway backstop
+            while heap and pops < max_pops:
+                pops += 1
+                neg_gain, _, i, tgt, entry_ver = heapq.heappop(heap)
+                if locked[i] or entry_ver != ver[i]:
+                    continue  # stale: a fresher exact entry was pushed
+                src = parts_l[i]
+                wi = w_l[i]
+                if part_w[tgt] + wi > cap_slack:
+                    # Target filled up since the push (part weights drift
+                    # without touching conn rows).  Re-evaluate this node once
+                    # against the current weights.
+                    ver[i] += 1
+                    push(i)
                     continue
-                g = c - own
-                if (best_g is None or g > best_g + _EPS
-                        or (g > best_g - _EPS and part_w[q] < best_w)):
-                    best_g, best_t, best_w = g, q, part_w[q]
-            if best_g is not None:
-                heapq.heappush(heap, (-best_g, seq, i, best_t, ver[i]))
-                seq += 1
+                if part_w[src] - wi < floor_slack or part_n[src] <= 1:
+                    # Source constraint: never under-floor or empty a part.
+                    # No re-push (unlike the cap branch): the node's conn row
+                    # is unchanged, so push() would recreate this same entry
+                    # and loop.  The node returns next pass if still boundary.
+                    continue
+                gain = -neg_gain  # exact: conn[i] unchanged since the push
+                # Tentative apply — hill climbing admits negative gains.
+                parts_l[i] = tgt
+                part_w[src] -= wi
+                part_w[tgt] += wi
+                part_n[src] -= 1
+                part_n[tgt] += 1
+                locked[i] = True
+                run_cut -= gain
+                move_log.append((i, src, tgt, gain))
+                if run_cut < best_cut - _EPS:
+                    best_cut, best_idx = run_cut, len(move_log)
+                # O(degree) incremental gain update: only the mover's
+                # neighbors' connections to (src, tgt) changed.
+                for j, wij in adj[i]:
+                    row = conn[j]
+                    row[src] -= wij
+                    row[tgt] += wij
+                    if not locked[j]:
+                        ver[j] += 1
+                        push(j)
+                if len(move_log) - best_idx > stall:
+                    break
 
-        total = np.bincount(rows, weights=ew, minlength=n)
-        own_all = conn_np[np.arange(n), parts_np]
-        for i in np.flatnonzero(total - own_all > _EPS).tolist():
-            push(i)  # boundary frontier
-
-        move_log: list = []   # (node, src, tgt, gain)
-        run_cut = best_cut = cut
-        best_idx = 0
-        pops, max_pops = 0, 50 * n + 1000  # lazy-heap runaway backstop
-        while heap and pops < max_pops:
-            pops += 1
-            neg_gain, _, i, tgt, entry_ver = heapq.heappop(heap)
-            if locked[i] or entry_ver != ver[i]:
-                continue  # stale: a fresher exact entry was pushed
-            src = parts_l[i]
-            wi = w_l[i]
-            if part_w[tgt] + wi > cap_slack:
-                # Target filled up since the push (part weights drift
-                # without touching conn rows).  Re-evaluate this node once
-                # against the current weights.
-                ver[i] += 1
-                push(i)
-                continue
-            if part_w[src] - wi < floor_slack or part_n[src] <= 1:
-                # Source constraint: never under-floor or empty a part.
-                # No re-push (unlike the cap branch): the node's conn row
-                # is unchanged, so push() would recreate this same entry
-                # and loop.  The node returns next pass if still boundary.
-                continue
-            gain = -neg_gain  # exact: conn[i] unchanged since the push
-            # Tentative apply — hill climbing admits negative gains.
-            parts_l[i] = tgt
-            part_w[src] -= wi
-            part_w[tgt] += wi
-            part_n[src] -= 1
-            part_n[tgt] += 1
-            locked[i] = True
-            run_cut -= gain
-            move_log.append((i, src, tgt, gain))
-            if run_cut < best_cut - _EPS:
-                best_cut, best_idx = run_cut, len(move_log)
-            # O(degree) incremental gain update: only the mover's
-            # neighbors' connections to (src, tgt) changed.
-            for j, wij in adj[i]:
-                row = conn[j]
-                row[src] -= wij
-                row[tgt] += wij
-                if not locked[j]:
-                    ver[j] += 1
-                    push(j)
-            if len(move_log) - best_idx > stall:
+            # Roll back to the best prefix (the FM contract: a pass never ends
+            # worse than it started; best_idx == 0 undoes the whole climb).
+            attempted = len(move_log)
+            for i, src, tgt, _g in reversed(move_log[best_idx:]):
+                parts_l[i] = src
+                part_w[src] += w_l[i]
+                part_w[tgt] -= w_l[i]
+                part_n[src] += 1
+                part_n[tgt] -= 1
+            parts_np = np.asarray(parts_l, dtype=np.int64)
+            kstats.passes += 1
+            kstats.moves_attempted += attempted
+            kstats.moves_kept += best_idx
+            kstats.rolled_back += attempted - best_idx
+            kstats.records.append(KwayPassRecord(
+                pass_no=pass_no, attempted=attempted, best_prefix=best_idx,
+                rolled_back=attempted - best_idx,
+                cut_before=cut, cut_after=best_cut))
+            stats.moves_applied += best_idx
+            improved = cut - best_cut
+            cut = best_cut
+            if best_idx == 0 or improved <= _EPS:
                 break
 
-        # Roll back to the best prefix (the FM contract: a pass never ends
-        # worse than it started; best_idx == 0 undoes the whole climb).
-        attempted = len(move_log)
-        for i, src, tgt, _g in reversed(move_log[best_idx:]):
-            parts_l[i] = src
-            part_w[src] += w_l[i]
-            part_w[tgt] -= w_l[i]
-            part_n[src] += 1
-            part_n[tgt] -= 1
-        parts_np = np.asarray(parts_l, dtype=np.int64)
-        kstats.passes += 1
-        kstats.moves_attempted += attempted
-        kstats.moves_kept += best_idx
-        kstats.rolled_back += attempted - best_idx
-        kstats.records.append(KwayPassRecord(
-            pass_no=pass_no, attempted=attempted, best_prefix=best_idx,
-            rolled_back=attempted - best_idx,
-            cut_before=cut, cut_after=best_cut))
-        stats.moves_applied += best_idx
-        improved = cut - best_cut
-        cut = best_cut
-        if best_idx == 0 or improved <= _EPS:
-            break
-
-    stats.cut_after = edge_cut(graph, parts_np)
-    stats.seconds = time.perf_counter() - t0
+        stats.cut_after = edge_cut(graph, parts_np)
+    stats.seconds = t.seconds
+    obs.counter_add("fm_passes", kstats.passes)
+    obs.counter_add("fm_moves_attempted", kstats.moves_attempted)
+    obs.counter_add("fm_moves", kstats.moves_kept)
+    obs.counter_add("fm_rollbacks", kstats.rolled_back)
     return parts_np, stats
 
 

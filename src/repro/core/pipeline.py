@@ -51,10 +51,11 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
-import time
+import os
 
 import numpy as np
 
+from repro import obs
 from repro.core.kway import kway_stage
 from repro.core.refine import (PostStats, balance_corridor, refine_stage,
                                repair_components)
@@ -71,6 +72,17 @@ class StageRecord:
     seconds: float
     info: dict = dataclasses.field(default_factory=dict)
 
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "name": self.name,
+                "seconds": self.seconds, **self.info}
+
+    @classmethod
+    def from_span(cls, span, kind: str, name: str, info: dict | None = None):
+        """Derive the record from a completed obs span (single source of
+        wall-clock truth when tracing is active)."""
+        return cls(kind=kind, name=name, seconds=span.seconds,
+                   info=dict(info or {}))
+
 
 @dataclasses.dataclass
 class PartitionContext:
@@ -85,6 +97,8 @@ class PartitionContext:
     parts_raw: np.ndarray | None = None  # bisect output, before any post stage
     report: RSBReport | None = None
     stages: list = dataclasses.field(default_factory=list)  # [StageRecord]
+    trace: object | None = None          # obs.Span root (None: REPRO_OBS=off)
+    config: dict = dataclasses.field(default_factory=dict)  # pipeline shape
 
     @property
     def n(self) -> int:
@@ -112,15 +126,31 @@ class PartitionContext:
             "nparts": self.nparts,
             "n": self.n,
             "seconds": self.seconds,
-            "stages": [
-                {"kind": s.kind, "name": s.name, "seconds": s.seconds,
-                 **s.info}
-                for s in self.stages
-            ],
+            "stages": [s.to_dict() for s in self.stages],
         }
         if self.report is not None and self.report.post is not None:
             out["post"] = self.report.post.row()
         return out
+
+    def export_manifest(self, path: str | None = None, *,
+                        name: str = "partition",
+                        runs_dir: str = "runs") -> str | None:
+        """Write this run's JSONL manifest (span tree + counters + config
+        + git SHA).  Returns the path, or None when no trace was recorded
+        (``REPRO_OBS=off``)."""
+        if self.trace is None:
+            return None
+        if path is None:
+            path = obs.run_path(runs_dir, name)
+        return obs.write_manifest(self.trace, path, name=name,
+                                  config=self.config)
+
+    def export_trace_events(self, path: str) -> str | None:
+        """Write the Chrome/Perfetto ``trace_event`` JSON for this run;
+        None when no trace was recorded."""
+        if self.trace is None:
+            return None
+        return obs.write_trace_events(self.trace, path)
 
 
 # ---------------------------------------------------------------------------
@@ -301,11 +331,11 @@ def run_post_stages(
     agg = PostStats(corridor=tuple(corridor))
     records = []
     for i, name in enumerate(post):
-        t0 = time.perf_counter()
         fn = _POST_STAGES[name]
-        parts, stats = fn(graph, parts, nparts, weights=weights,
-                          **_stage_kw(fn, post_kw))
-        dt = time.perf_counter() - t0
+        with obs.timed(f"post:{name}") as t:
+            parts, stats = fn(graph, parts, nparts, weights=weights,
+                              **_stage_kw(fn, post_kw))
+        dt = t.seconds
         parts = np.asarray(parts, dtype=np.int64)
         agg.stages.append(name)
         agg.fragments_repaired += stats.fragments_repaired
@@ -366,33 +396,55 @@ class PartitionPipeline:
 
     def run(self, obj, nparts: int, *, coords: np.ndarray | None = None,
             weights: np.ndarray | None = None) -> PartitionContext:
-        """Partition a HexMesh or Graph; returns the full context."""
+        """Partition a HexMesh or Graph; returns the full context.
+
+        When tracing is on (``REPRO_OBS`` unset/on) the whole run happens
+        inside one ``partition`` root span — ``ctx.trace`` — with one
+        child span per stage; ``ctx.export_manifest()`` serializes it, and
+        setting ``REPRO_OBS_DIR`` writes a manifest there automatically.
+        """
         ctx = _make_context(obj, nparts, coords, weights)
         spectral = self.bisect.startswith("rsb")
+        ctx.config = {"pre": self.pre, "bisect": self.bisect,
+                      "post": list(self.post), "nparts": nparts, "n": ctx.n}
 
+        root = obs.trace("partition", nparts=nparts, n=ctx.n,
+                         pre=self.pre, bisect=self.bisect,
+                         post=",".join(self.post))
+        with root:
+            self._run_stages(ctx, nparts, spectral)
+        if isinstance(root, obs.Span):
+            ctx.trace = root
+            out_dir = os.environ.get("REPRO_OBS_DIR")
+            if out_dir:
+                ctx.export_manifest(runs_dir=out_dir)
+        return ctx
+
+    def _run_stages(self, ctx: PartitionContext, nparts: int,
+                    spectral: bool) -> None:
         # --- pre: reorder hint (rcb/rib) or one-shot permutation (sfc)
-        t0 = time.perf_counter()
-        hint, order = None, None
-        run_ctx = ctx
-        if spectral and self.pre in ("rcb", "rib"):
-            hint = self.pre  # per-level reorder, applied inside the driver
-        elif spectral and self.pre == "sfc":
-            if ctx.coords is not None:
-                from repro.core.sfc import sfc_order
+        with obs.timed(f"pre:{self.pre}") as t_pre:
+            hint, order = None, None
+            run_ctx = ctx
+            if spectral and self.pre in ("rcb", "rib"):
+                hint = self.pre  # per-level reorder, applied inside driver
+            elif spectral and self.pre == "sfc":
+                if ctx.coords is not None:
+                    from repro.core.sfc import sfc_order
 
-                order = sfc_order(ctx.coords)
-                run_ctx = _permuted_input(ctx, order)
+                    order = sfc_order(ctx.coords)
+                    run_ctx = _permuted_input(ctx, order)
         ctx.stages.append(StageRecord(
-            kind="pre", name=self.pre, seconds=time.perf_counter() - t0,
+            kind="pre", name=self.pre, seconds=t_pre.seconds,
             info={"mode": ("per-level" if hint else
                            "permute" if order is not None else "noop")},
         ))
 
         # --- bisect
-        t0 = time.perf_counter()
-        parts, report = _BISECT_STAGES[self.bisect](run_ctx, hint,
-                                                    **self.bisect_kw)
-        dt = time.perf_counter() - t0
+        with obs.timed(f"bisect:{self.bisect}") as t_bisect:
+            parts, report = _BISECT_STAGES[self.bisect](run_ctx, hint,
+                                                        **self.bisect_kw)
+        dt = t_bisect.seconds
         if order is not None:   # map labels back to the caller's order
             unperm = np.empty_like(parts)
             unperm[order] = parts
@@ -422,7 +474,6 @@ class PartitionPipeline:
             ctx.parts = parts
             ctx.stages.extend(records)
             report.post = agg
-        return ctx
 
 
 # ---------------------------------------------------------------------------

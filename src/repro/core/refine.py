@@ -50,10 +50,10 @@ post pair (repair, then refine_stage) as one call for direct library use.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
+from repro import obs
 from repro.mesh.graphs import Graph, connected_labels
 
 
@@ -98,6 +98,26 @@ class PostStats:
             "cut_after": self.cut_after,
             "seconds": self.seconds,
         }
+
+    def to_dict(self) -> dict:
+        return self.row()
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PostStats":
+        """Rebuild from :meth:`to_dict` output (``kway`` comes back as its
+        raw row dict — consumers read it like ``KwayStats.row()``)."""
+        s = cls(stages=list(d.get("stages", [])),
+                fragments_repaired=d.get("fragments_repaired", 0),
+                forced_moves=d.get("forced_moves", 0),
+                unrepaired_fragments=d.get("unrepaired_fragments", 0),
+                moves_applied=d.get("moves_applied", 0),
+                corridor=tuple(d["corridor"]) if d.get("corridor") else None,
+                kway=d.get("kway"),
+                cut_before=d.get("cut_before", 0.0),
+                cut_after=d.get("cut_after", 0.0),
+                seconds=d.get("seconds", 0.0))
+        s.sweeps = [SweepRecord(**r) for r in d.get("sweeps", [])]
+        return s
 
 
 def edge_cut(graph: Graph, parts: np.ndarray) -> float:
@@ -167,76 +187,77 @@ def repair_components(
     _, cap = corridor
     stats = PostStats(stages=["repair"], corridor=tuple(corridor),
                       cut_before=edge_cut(graph, parts))
-    t0 = time.perf_counter()
-
-    deferred = 0
-    for round_no in range(max_rounds):
+    with obs.timed("repair") as t:
         deferred = 0
-        intra = parts[rows] == parts[cols]
-        comp = connected_labels(n, rows[intra], cols[intra])
-        n_comp = int(comp.max()) + 1 if n else 0
-        comp_w = np.bincount(comp, weights=w, minlength=n_comp)
-        # Representative node per component → its (uniform) part.
-        _, reps = np.unique(comp, return_index=True)
-        part_of_comp = parts[reps]
-        # Keep each part's heaviest component (ties: lowest label).
-        keep = np.zeros(n_comp, dtype=bool)
-        order = np.lexsort((np.arange(n_comp), -comp_w, part_of_comp))
-        first = np.r_[True, part_of_comp[order][1:] != part_of_comp[order][:-1]]
-        keep[order[first]] = True
-        frag_ids = np.flatnonzero(~keep)
-        if frag_ids.size == 0:
-            break
-        # Shared edge weight fragment → foreign part, over cut edges whose
-        # source lies in a fragment (compact fragment indexing keeps the
-        # bincount at F·nparts, not n·nparts).
-        fidx = -np.ones(n_comp, dtype=np.int64)
-        fidx[frag_ids] = np.arange(frag_ids.size)
-        cut_e = np.flatnonzero(~intra)
-        fsrc = fidx[comp[rows[cut_e]]]
-        sel = fsrc >= 0
-        shared = np.bincount(
-            fsrc[sel] * np.int64(nparts) + parts[cols[cut_e[sel]]],
-            weights=ew[cut_e[sel]], minlength=frag_ids.size * nparts,
-        ).reshape(frag_ids.size, nparts)
+        for round_no in range(max_rounds):
+            deferred = 0
+            intra = parts[rows] == parts[cols]
+            comp = connected_labels(n, rows[intra], cols[intra])
+            n_comp = int(comp.max()) + 1 if n else 0
+            comp_w = np.bincount(comp, weights=w, minlength=n_comp)
+            # Representative node per component → its (uniform) part.
+            _, reps = np.unique(comp, return_index=True)
+            part_of_comp = parts[reps]
+            # Keep each part's heaviest component (ties: lowest label).
+            keep = np.zeros(n_comp, dtype=bool)
+            order = np.lexsort((np.arange(n_comp), -comp_w, part_of_comp))
+            first = np.r_[True, part_of_comp[order][1:] != part_of_comp[order][:-1]]
+            keep[order[first]] = True
+            frag_ids = np.flatnonzero(~keep)
+            if frag_ids.size == 0:
+                break
+            # Shared edge weight fragment → foreign part, over cut edges whose
+            # source lies in a fragment (compact fragment indexing keeps the
+            # bincount at F·nparts, not n·nparts).
+            fidx = -np.ones(n_comp, dtype=np.int64)
+            fidx[frag_ids] = np.arange(frag_ids.size)
+            cut_e = np.flatnonzero(~intra)
+            fsrc = fidx[comp[rows[cut_e]]]
+            sel = fsrc >= 0
+            shared = np.bincount(
+                fsrc[sel] * np.int64(nparts) + parts[cols[cut_e[sel]]],
+                weights=ew[cut_e[sel]], minlength=frag_ids.size * nparts,
+            ).reshape(frag_ids.size, nparts)
 
-        moved_any = False
-        received = np.zeros(nparts, dtype=bool)
-        for k, f in enumerate(frag_ids):
-            src = int(part_of_comp[f])
-            if received[src]:
-                # The part just gained members; this fragment may now be
-                # connected to them, so its zero-internal-edge premise (the
-                # strict-cut-decrease argument) no longer holds.  Defer to
-                # the next round, which recomputes components.
-                deferred += 1
-                continue
-            cand = np.flatnonzero(shared[k] > 0)
-            if cand.size == 0:
-                continue  # island: no foreign edges to follow
-            fw = comp_w[f]
-            fits = cand[part_w[cand] + fw <= cap]
-            pool = fits if fits.size else cand
-            best_shared = shared[k, pool].max()
-            ties = pool[shared[k, pool] == best_shared]
-            tgt = int(ties[np.argmin(part_w[ties])])  # ties → lighter part
-            if not fits.size:
-                stats.forced_moves += 1
-            parts[comp == f] = tgt
-            part_w[tgt] += fw
-            part_w[src] -= fw
-            received[tgt] = True
-            stats.fragments_repaired += 1
-            moved_any = True
-        if not moved_any:
-            break
-    else:
-        # Round cap hit with fragments still deferred: the contract
-        # (zero disconnected parts) is broken — make it diagnosable.
-        stats.unrepaired_fragments = deferred
+            moved_any = False
+            received = np.zeros(nparts, dtype=bool)
+            for k, f in enumerate(frag_ids):
+                src = int(part_of_comp[f])
+                if received[src]:
+                    # The part just gained members; this fragment may now be
+                    # connected to them, so its zero-internal-edge premise (the
+                    # strict-cut-decrease argument) no longer holds.  Defer to
+                    # the next round, which recomputes components.
+                    deferred += 1
+                    continue
+                cand = np.flatnonzero(shared[k] > 0)
+                if cand.size == 0:
+                    continue  # island: no foreign edges to follow
+                fw = comp_w[f]
+                fits = cand[part_w[cand] + fw <= cap]
+                pool = fits if fits.size else cand
+                best_shared = shared[k, pool].max()
+                ties = pool[shared[k, pool] == best_shared]
+                tgt = int(ties[np.argmin(part_w[ties])])  # ties → lighter part
+                if not fits.size:
+                    stats.forced_moves += 1
+                parts[comp == f] = tgt
+                part_w[tgt] += fw
+                part_w[src] -= fw
+                received[tgt] = True
+                stats.fragments_repaired += 1
+                moved_any = True
+            if not moved_any:
+                break
+        else:
+            # Round cap hit with fragments still deferred: the contract
+            # (zero disconnected parts) is broken — make it diagnosable.
+            stats.unrepaired_fragments = deferred
 
-    stats.cut_after = edge_cut(graph, parts)
-    stats.seconds = time.perf_counter() - t0
+        stats.cut_after = edge_cut(graph, parts)
+    stats.seconds = t.seconds
+    obs.counter_add("fragments_repaired", stats.fragments_repaired)
+    obs.counter_add("forced_moves", stats.forced_moves)
     return parts, stats
 
 
@@ -270,68 +291,69 @@ def refine_boundary(
     floor, cap = corridor
     stats = PostStats(stages=["refine"], corridor=tuple(corridor),
                       cut_before=edge_cut(graph, parts))
-    t0 = time.perf_counter()
+    with obs.timed("refine_sweeps") as t:
+        for s in range(sweeps):
+            pr, pc = parts[rows], parts[cols]
+            cut_mask = pr != pc
+            cut0 = float(ew[cut_mask].sum() / 2.0)
+            bmask = np.zeros(n, dtype=bool)
+            bmask[rows[cut_mask]] = True
+            bnodes = np.flatnonzero(bmask)
+            if bnodes.size == 0:
+                break
+            bidx = -np.ones(n, dtype=np.int64)
+            bidx[bnodes] = np.arange(bnodes.size)
+            e_sel = bidx[rows] >= 0
+            conn = np.bincount(
+                bidx[rows[e_sel]] * np.int64(nparts) + pc[e_sel],
+                weights=ew[e_sel], minlength=bnodes.size * nparts,
+            ).reshape(bnodes.size, nparts)
+            own = parts[bnodes]
+            ar = np.arange(bnodes.size)
+            internal = conn[ar, own].copy()
+            conn[ar, own] = -np.inf
+            best = conn.argmax(1)
+            gain = conn[ar, best] - internal
+            cand = np.flatnonzero(gain > 1e-12)
+            order = cand[np.argsort(-gain[cand], kind="stable")]
 
-    for s in range(sweeps):
-        pr, pc = parts[rows], parts[cols]
-        cut_mask = pr != pc
-        cut0 = float(ew[cut_mask].sum() / 2.0)
-        bmask = np.zeros(n, dtype=bool)
-        bmask[rows[cut_mask]] = True
-        bnodes = np.flatnonzero(bmask)
-        if bnodes.size == 0:
-            break
-        bidx = -np.ones(n, dtype=np.int64)
-        bidx[bnodes] = np.arange(bnodes.size)
-        e_sel = bidx[rows] >= 0
-        conn = np.bincount(
-            bidx[rows[e_sel]] * np.int64(nparts) + pc[e_sel],
-            weights=ew[e_sel], minlength=bnodes.size * nparts,
-        ).reshape(bnodes.size, nparts)
-        own = parts[bnodes]
-        ar = np.arange(bnodes.size)
-        internal = conn[ar, own].copy()
-        conn[ar, own] = -np.inf
-        best = conn.argmax(1)
-        gain = conn[ar, best] - internal
-        cand = np.flatnonzero(gain > 1e-12)
-        order = cand[np.argsort(-gain[cand], kind="stable")]
+            moved = np.zeros(n, dtype=bool)
+            applied = 0
+            for k in order:
+                node = int(bnodes[k])
+                nb = nbrs[indptr[node]:indptr[node + 1]]
+                if moved[nb].any():
+                    continue  # stale gain: a neighbor changed sides this sweep
+                src, wn = int(parts[node]), w[node]
+                if part_w[src] - wn < floor or part_n[src] <= 1:
+                    continue  # never empty or under-floor the source part
+                # Best *feasible* positive-gain target: when the argmax part
+                # would overflow the cap, fall back to the next-best part that
+                # both improves the cut and fits the corridor.
+                row = conn[k]
+                pos = np.flatnonzero(row - internal[k] > 1e-12)
+                fits = pos[part_w[pos] + wn <= cap]
+                if fits.size == 0:
+                    continue
+                tgt = int(fits[np.argmax(row[fits])])
+                parts[node] = tgt
+                part_w[tgt] += wn
+                part_w[src] -= wn
+                part_n[tgt] += 1
+                part_n[src] -= 1
+                moved[node] = True
+                applied += 1
+            cut1 = edge_cut(graph, parts)
+            stats.sweeps.append(SweepRecord(sweep=s, moves=applied,
+                                            cut_before=cut0, cut_after=cut1))
+            stats.moves_applied += applied
+            if applied == 0:
+                break
 
-        moved = np.zeros(n, dtype=bool)
-        applied = 0
-        for k in order:
-            node = int(bnodes[k])
-            nb = nbrs[indptr[node]:indptr[node + 1]]
-            if moved[nb].any():
-                continue  # stale gain: a neighbor changed sides this sweep
-            src, wn = int(parts[node]), w[node]
-            if part_w[src] - wn < floor or part_n[src] <= 1:
-                continue  # never empty or under-floor the source part
-            # Best *feasible* positive-gain target: when the argmax part
-            # would overflow the cap, fall back to the next-best part that
-            # both improves the cut and fits the corridor.
-            row = conn[k]
-            pos = np.flatnonzero(row - internal[k] > 1e-12)
-            fits = pos[part_w[pos] + wn <= cap]
-            if fits.size == 0:
-                continue
-            tgt = int(fits[np.argmax(row[fits])])
-            parts[node] = tgt
-            part_w[tgt] += wn
-            part_w[src] -= wn
-            part_n[tgt] += 1
-            part_n[src] -= 1
-            moved[node] = True
-            applied += 1
-        cut1 = edge_cut(graph, parts)
-        stats.sweeps.append(SweepRecord(sweep=s, moves=applied,
-                                        cut_before=cut0, cut_after=cut1))
-        stats.moves_applied += applied
-        if applied == 0:
-            break
-
-    stats.cut_after = edge_cut(graph, parts)
-    stats.seconds = time.perf_counter() - t0
+        stats.cut_after = edge_cut(graph, parts)
+    stats.seconds = t.seconds
+    obs.counter_add("refine_moves", stats.moves_applied)
+    obs.counter_add("refine_sweeps", len(stats.sweeps))
     return parts, stats
 
 
@@ -398,26 +420,26 @@ def repair_refine(
     :func:`refine_stage` — composed as one call (exactly what the pipeline
     runs for ``post=("repair", "refine")``).  One corridor, computed from
     the incoming labels, governs the whole chain."""
-    t0 = time.perf_counter()
-    if corridor is None:
-        corridor = balance_corridor(parts, nparts, weights, balance_tol)
-    stats = PostStats(corridor=tuple(corridor),
-                      cut_before=edge_cut(graph, parts))
-    kw = dict(weights=weights, balance_tol=balance_tol, corridor=corridor)
-    if repair:
-        parts, r = repair_components(graph, parts, nparts, **kw)
-        stats.stages.append("repair")
-        stats.fragments_repaired += r.fragments_repaired
-        stats.forced_moves += r.forced_moves
-        stats.unrepaired_fragments = r.unrepaired_fragments
-    if refine:
-        parts, f = refine_stage(graph, parts, nparts, sweeps=sweeps, **kw)
-        stats.stages.append("refine")
-        stats.fragments_repaired += f.fragments_repaired
-        stats.forced_moves += f.forced_moves
-        stats.unrepaired_fragments = f.unrepaired_fragments
-        stats.moves_applied += f.moves_applied
-        stats.sweeps.extend(f.sweeps)
-    stats.cut_after = edge_cut(graph, parts)
-    stats.seconds = time.perf_counter() - t0
+    with obs.timed("repair_refine") as t_chain:
+        if corridor is None:
+            corridor = balance_corridor(parts, nparts, weights, balance_tol)
+        stats = PostStats(corridor=tuple(corridor),
+                          cut_before=edge_cut(graph, parts))
+        kw = dict(weights=weights, balance_tol=balance_tol, corridor=corridor)
+        if repair:
+            parts, r = repair_components(graph, parts, nparts, **kw)
+            stats.stages.append("repair")
+            stats.fragments_repaired += r.fragments_repaired
+            stats.forced_moves += r.forced_moves
+            stats.unrepaired_fragments = r.unrepaired_fragments
+        if refine:
+            parts, f = refine_stage(graph, parts, nparts, sweeps=sweeps, **kw)
+            stats.stages.append("refine")
+            stats.fragments_repaired += f.fragments_repaired
+            stats.forced_moves += f.forced_moves
+            stats.unrepaired_fragments = f.unrepaired_fragments
+            stats.moves_applied += f.moves_applied
+            stats.sweeps.extend(f.sweeps)
+        stats.cut_after = edge_cut(graph, parts)
+    stats.seconds = t_chain.seconds
     return parts, stats

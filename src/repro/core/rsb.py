@@ -47,10 +47,10 @@ engines.  Per-node Lanczos start vectors are seeded deterministically from
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.fiedler import (
     _DENSE_CUTOFF,
     fiedler_from_graph,
@@ -75,6 +75,10 @@ class BisectionRecord:
     residual: float
     seconds: float
     levels: int = 0    # multilevel hierarchy depth (warm start or AMG); 0 = none
+    split_seconds: float = 0.0   # this node's sort/split + child extraction
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -89,6 +93,9 @@ class LevelRecord:
     iterations: int          # Σ per-node restarts / outer iterations
     solve_seconds: float     # Fiedler solves (batched: the bucket solves)
     split_seconds: float     # sort/split + child extraction
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -111,6 +118,22 @@ class RSBReport:
         """Deepest multilevel hierarchy used by any solve (warm-start
         Galerkin ladder for Lanczos, AMG ladder for inverse iteration)."""
         return max((r.levels for r in self.records), default=0)
+
+    def to_dict(self) -> dict:
+        """JSON-able form — the one the benchmark rows and run manifests
+        serialize instead of re-extracting fields by hand."""
+        return {
+            "engine": self.engine,
+            "pre": self.pre,
+            "precond": self.precond,
+            "multilevel": self.multilevel,
+            "seconds": self.seconds,
+            "total_iterations": self.total_iterations,
+            "precond_levels": self.precond_levels,
+            "records": [r.to_dict() for r in self.records],
+            "levels": [lv.to_dict() for lv in self.levels],
+            "post": self.post.to_dict() if self.post is not None else None,
+        }
 
 
 def _node_seed(seed: int, level: int, p_lo: int) -> int:
@@ -162,7 +185,7 @@ def _levels_from_records(records: list) -> list:
             buckets=_size_buckets([r.size for r in rs]),
             iterations=sum(r.iterations for r in rs),
             solve_seconds=sum(r.seconds for r in rs),
-            split_seconds=0.0,
+            split_seconds=sum(r.split_seconds for r in rs),
         ))
     return out
 
@@ -265,7 +288,6 @@ def _rsb_mesh_recursive(
 ) -> tuple[np.ndarray, RSBReport]:
     records: list[BisectionRecord] = []
     parts = np.zeros(mesh.nelems, dtype=np.int64)
-    t0 = time.perf_counter()
 
     def rec(idx: np.ndarray, p_lo: int, p_hi: int, level: int) -> None:
         np_here = p_hi - p_lo
@@ -287,26 +309,30 @@ def _rsb_mesh_recursive(
             )
             order_amg = np.arange(idx.size)  # already RCB-ordered above
         warm = _warm_vector(mesh.coords[idx]) if warm_start else None
-        t = time.perf_counter()
-        res = fiedler_from_mesh(
-            sub_vg, method=method, graph_for_amg=graph_amg, order=order_amg,
-            seed=_node_seed(seed, level, p_lo), tol=tol, window=window,
-            max_restarts=max_restarts, warm=warm, multilevel=multilevel,
-        )
-        dt = time.perf_counter() - t
+        with obs.timed("solve", level=level, n=int(idx.size)) as t_solve:
+            res = fiedler_from_mesh(
+                sub_vg, method=method, graph_for_amg=graph_amg, order=order_amg,
+                seed=_node_seed(seed, level, p_lo), tol=tol, window=window,
+                max_restarts=max_restarts, warm=warm, multilevel=multilevel,
+            )
+        n_left = np_here // 2
+        with obs.timed("split", level=level) as t_split:
+            lo, hi = _proportional_split(
+                res.vector, mesh.weights[idx], n_left, np_here)
+            idx_lo, idx_hi = idx[lo], idx[hi]
         records.append(BisectionRecord(
             level=level, size=int(idx.size), nparts=np_here, method=res.method,
             iterations=res.iterations, eigenvalue=res.eigenvalue,
-            residual=res.residual, seconds=dt, levels=res.levels,
+            residual=res.residual, seconds=t_solve.seconds, levels=res.levels,
+            split_seconds=t_split.seconds,
         ))
-        n_left = np_here // 2
-        lo, hi = _proportional_split(res.vector, mesh.weights[idx], n_left, np_here)
-        rec(idx[lo], p_lo, p_lo + n_left, level + 1)
-        rec(idx[hi], p_lo + n_left, p_hi, level + 1)
+        rec(idx_lo, p_lo, p_lo + n_left, level + 1)
+        rec(idx_hi, p_lo + n_left, p_hi, level + 1)
 
-    rec(np.arange(mesh.nelems, dtype=np.int64), 0, nparts, 0)
+    with obs.timed("engine", engine="recursive") as t_total:
+        rec(np.arange(mesh.nelems, dtype=np.int64), 0, nparts, 0)
     return parts, RSBReport(
-        records=records, seconds=time.perf_counter() - t0,
+        records=records, seconds=t_total.seconds,
         levels=_levels_from_records(records), engine="recursive",
         pre=pre or "none", precond="amg" if method == "inverse" else "none",
         multilevel=multilevel,
@@ -408,7 +434,6 @@ def _rsb_graph_recursive(
     w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
     records: list[BisectionRecord] = []
     parts = np.zeros(n, dtype=np.int64)
-    t0 = time.perf_counter()
 
     def rec(g: Graph, idx: np.ndarray, p_lo: int, p_hi: int, level: int) -> None:
         np_here = p_hi - p_lo
@@ -423,26 +448,30 @@ def _rsb_graph_recursive(
         warm = None
         if warm_start and coords is not None:
             warm = _warm_vector(coords[idx])
-        t = time.perf_counter()
-        res = fiedler_from_graph(
-            g, method=method, order=None, seed=_node_seed(seed, level, p_lo),
-            warm=warm, tol=tol, window=window, max_restarts=max_restarts,
-            use_kernel=use_kernel, multilevel=multilevel,
-        )
-        dt = time.perf_counter() - t
+        with obs.timed("solve", level=level, n=int(idx.size)) as t_solve:
+            res = fiedler_from_graph(
+                g, method=method, order=None, seed=_node_seed(seed, level, p_lo),
+                warm=warm, tol=tol, window=window, max_restarts=max_restarts,
+                use_kernel=use_kernel, multilevel=multilevel,
+            )
+        n_left = np_here // 2
+        with obs.timed("split", level=level) as t_split:
+            lo, hi = _proportional_split(res.vector, w[idx], n_left, np_here)
+            g_lo, g_hi = g.sub(lo), g.sub(hi)
+            idx_lo, idx_hi = idx[lo], idx[hi]
         records.append(BisectionRecord(
             level=level, size=int(idx.size), nparts=np_here, method=res.method,
             iterations=res.iterations, eigenvalue=res.eigenvalue,
-            residual=res.residual, seconds=dt, levels=res.levels,
+            residual=res.residual, seconds=t_solve.seconds, levels=res.levels,
+            split_seconds=t_split.seconds,
         ))
-        n_left = np_here // 2
-        lo, hi = _proportional_split(res.vector, w[idx], n_left, np_here)
-        rec(g.sub(lo), idx[lo], p_lo, p_lo + n_left, level + 1)
-        rec(g.sub(hi), idx[hi], p_lo + n_left, p_hi, level + 1)
+        rec(g_lo, idx_lo, p_lo, p_lo + n_left, level + 1)
+        rec(g_hi, idx_hi, p_lo + n_left, p_hi, level + 1)
 
-    rec(graph, np.arange(n, dtype=np.int64), 0, nparts, 0)
+    with obs.timed("engine", engine="recursive") as t_total:
+        rec(graph, np.arange(n, dtype=np.int64), 0, nparts, 0)
     return parts, RSBReport(
-        records=records, seconds=time.perf_counter() - t0,
+        records=records, seconds=t_total.seconds,
         levels=_levels_from_records(records), engine="recursive",
         pre=pre or "none", precond="amg" if method == "inverse" else "none",
         multilevel=multilevel,
@@ -458,79 +487,86 @@ def _rsb_graph_batched(
     records: list[BisectionRecord] = []
     levels: list[LevelRecord] = []
     parts = np.zeros(n, dtype=np.int64)
-    t0 = time.perf_counter()
+    with obs.timed("engine", engine="batched") as t_total:
+        # Run-wide shape-bucket pins (see _rsb_mesh_batched): subgraph degrees
+        # never exceed the root's, so the root ELL width bounds every level.
+        pack_slots = next_pow2(max(n, 2))
+        pack_segs = next_pow2(max(nparts, 1))
+        root_width = int(graph.degrees.max()) if graph.nnz else 1
+        width_pad = next_pow2(max(root_width, 2))
 
-    # Run-wide shape-bucket pins (see _rsb_mesh_batched): subgraph degrees
-    # never exceed the root's, so the root ELL width bounds every level.
-    pack_slots = next_pow2(max(n, 2))
-    pack_segs = next_pow2(max(nparts, 1))
-    root_width = int(graph.degrees.max()) if graph.nnz else 1
-    width_pad = next_pow2(max(root_width, 2))
+        active = [(graph, np.arange(n, dtype=np.int64), 0, nparts)]
+        level = 0
+        while active:
+            solve_nodes = []
+            for g, idx, p_lo, p_hi in active:
+                if p_hi - p_lo <= 1 or idx.size <= 1:
+                    parts[idx] = p_lo
+                    continue
+                if pre in ("rcb", "rib") and coords is not None:
+                    fn = rcb_order if pre == "rcb" else rib_order
+                    perm = fn(coords[idx], w[idx])
+                    idx = idx[perm]
+                    g = g.sub(perm)
+                solve_nodes.append((g, idx, p_lo, p_hi))
+            if not solve_nodes:
+                break
 
-    active = [(graph, np.arange(n, dtype=np.int64), 0, nparts)]
-    level = 0
-    while active:
-        solve_nodes = []
-        for g, idx, p_lo, p_hi in active:
-            if p_hi - p_lo <= 1 or idx.size <= 1:
-                parts[idx] = p_lo
-                continue
-            if pre in ("rcb", "rib") and coords is not None:
-                fn = rcb_order if pre == "rcb" else rib_order
-                perm = fn(coords[idx], w[idx])
-                idx = idx[perm]
-                g = g.sub(perm)
-            solve_nodes.append((g, idx, p_lo, p_hi))
-        if not solve_nodes:
-            break
-
-        t_solve = time.perf_counter()
-        results = fiedler_from_graph_batched(
-            [g for g, _, _, _ in solve_nodes],
-            method=method,
-            seeds=[_node_seed(seed, level, p_lo) for _, _, p_lo, _ in solve_nodes],
-            warms=[
-                _warm_vector(coords[idx]) if warm_start and coords is not None
-                else None
-                for _, idx, _, _ in solve_nodes
-            ],
-            tol=tol, window=window, max_restarts=max_restarts,
-            pack_slots=pack_slots, pack_segs=pack_segs, width_pad=width_pad,
-            use_kernel=use_kernel, multilevel=multilevel, precond=precond,
-        )
-        solve_dt = time.perf_counter() - t_solve
-
-        t_split = time.perf_counter()
-        next_active = []
-        for (g, idx, p_lo, p_hi), res in zip(solve_nodes, results):
-            np_here = p_hi - p_lo
-            records.append(BisectionRecord(
-                level=level, size=int(idx.size), nparts=np_here,
-                method=res.method, iterations=res.iterations,
-                eigenvalue=res.eigenvalue, residual=res.residual,
-                seconds=solve_dt / len(solve_nodes), levels=res.levels,
+            with obs.span(f"level:{level}", nodes=len(solve_nodes)):
+                with obs.timed("solve", level=level) as t_solve:
+                    results = fiedler_from_graph_batched(
+                        [g for g, _, _, _ in solve_nodes],
+                        method=method,
+                        seeds=[_node_seed(seed, level, p_lo)
+                               for _, _, p_lo, _ in solve_nodes],
+                        warms=[
+                            _warm_vector(coords[idx])
+                            if warm_start and coords is not None else None
+                            for _, idx, _, _ in solve_nodes
+                        ],
+                        tol=tol, window=window, max_restarts=max_restarts,
+                        pack_slots=pack_slots, pack_segs=pack_segs,
+                        width_pad=width_pad, use_kernel=use_kernel,
+                        multilevel=multilevel, precond=precond,
+                    )
+                with obs.timed("split", level=level) as t_split:
+                    next_active = []
+                    for (g, idx, p_lo, p_hi), res in zip(solve_nodes, results):
+                        np_here = p_hi - p_lo
+                        records.append(BisectionRecord(
+                            level=level, size=int(idx.size), nparts=np_here,
+                            method=res.method, iterations=res.iterations,
+                            eigenvalue=res.eigenvalue, residual=res.residual,
+                            seconds=t_solve.seconds / len(solve_nodes),
+                            levels=res.levels,
+                        ))
+                        n_left = np_here // 2
+                        lo, hi = _proportional_split(
+                            res.vector, w[idx], n_left, np_here)
+                        g_lo, g_hi = extract_subgraphs(g, [lo, hi])
+                        next_active.append((g_lo, idx[lo], p_lo, p_lo + n_left))
+                        next_active.append((g_hi, idx[hi], p_lo + n_left, p_hi))
+            levels.append(LevelRecord(
+                level=level,
+                n_nodes=len(solve_nodes),
+                total_size=sum(int(idx.size) for _, idx, _, _ in solve_nodes),
+                buckets=_size_buckets(
+                    [int(idx.size) for _, idx, _, _ in solve_nodes]
+                ),
+                iterations=sum(r.iterations for r in results),
+                solve_seconds=t_solve.seconds,
+                split_seconds=t_split.seconds,
             ))
-            n_left = np_here // 2
-            lo, hi = _proportional_split(res.vector, w[idx], n_left, np_here)
-            g_lo, g_hi = extract_subgraphs(g, [lo, hi])
-            next_active.append((g_lo, idx[lo], p_lo, p_lo + n_left))
-            next_active.append((g_hi, idx[hi], p_lo + n_left, p_hi))
-        levels.append(LevelRecord(
-            level=level,
-            n_nodes=len(solve_nodes),
-            total_size=sum(int(idx.size) for _, idx, _, _ in solve_nodes),
-            buckets=_size_buckets(
-                [int(idx.size) for _, idx, _, _ in solve_nodes]
-            ),
-            iterations=sum(r.iterations for r in results),
-            solve_seconds=solve_dt,
-            split_seconds=time.perf_counter() - t_split,
-        ))
-        active = next_active
-        level += 1
+            # Per-node split cost isn't separable in the level-synchronous
+            # engine; attribute the level's split evenly so engine comparisons
+            # on summed split_seconds stay apples-to-apples.
+            for r in records[-len(solve_nodes):]:
+                r.split_seconds = t_split.seconds / len(solve_nodes)
+            active = next_active
+            level += 1
 
     return parts, RSBReport(
-        records=records, seconds=time.perf_counter() - t0,
+        records=records, seconds=t_total.seconds,
         levels=levels, engine="batched", pre=pre or "none",
         precond=precond if method == "inverse" else "none",
         multilevel=multilevel,

@@ -43,6 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
+
 
 @dataclasses.dataclass(frozen=True, eq=False)  # identity eq/hash: ndarray
 class HaloPlan:                                # fields break field-wise ==
@@ -177,13 +179,20 @@ def plan_halo_sharding(graph, parts, nparts: int | None = None,
         edge_weight[pr_s, gpos] = w_s
         edge_mask[pr_s, gpos] = 1.0
 
-    return HaloPlan(
+    plan = HaloPlan(
         n=n, n_shards=nparts, n_local=n_local, halo=halo, max_edges=max_edges,
         block_sizes=counts, shard_of=parts, slot_of=slot_of,
         export_idx=export_idx, export_mask=export_mask,
         edge_src=edge_src, edge_dst=edge_dst,
         edge_weight=edge_weight, edge_mask=edge_mask,
     )
+    # Wire volume of the plan — what the partition's edge cut costs the
+    # runtime, per sweep per feature column (float32 ⇒ 4 bytes/word).
+    words = plan.collective_words_per_feature
+    obs.counter_add("halo_words", float(words))
+    obs.counter_add("halo_bytes", 4.0 * words)
+    obs.gauge_max("halo_max_degree", int(halo))
+    return plan
 
 
 # ---------------------------------------------------------------------------

@@ -8,12 +8,12 @@ prefill/decode_step functions the dry-run lowers at production shape.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_arch
 
 
@@ -39,39 +39,53 @@ def main() -> None:
     )
     max_seq = args.prompt_len + args.steps
 
-    t0 = time.perf_counter()
-    logits, cache = jax.jit(lambda p, t: prefill(cfg, p, t))(params, prompts)
-    cache = {
-        k: jnp.pad(v, ((0, 0), (0, 0), (0, args.steps), (0, 0), (0, 0)))
-        for k, v in cache.items()
-    }
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
+    # One serve-run trace: a prefill span + one span per decode step.  The
+    # per-step spans block on the step's result — that per-token sync IS
+    # the serving latency a client sees, and it feeds the p50/p99 summary.
+    root = obs.trace("serve", arch=cfg.name, batch=args.batch,
+                     steps=args.steps)
+    with root:
+        with obs.timed("prefill", prompt_len=args.prompt_len) as t_pre:
+            logits, cache = jax.jit(
+                lambda p, t: prefill(cfg, p, t))(params, prompts)
+            cache = {
+                k: jnp.pad(v,
+                           ((0, 0), (0, 0), (0, args.steps), (0, 0), (0, 0)))
+                for k, v in cache.items()
+            }
+            jax.block_until_ready(logits)
+        t_prefill = t_pre.seconds
 
-    step_fn = jax.jit(
-        lambda p, c, t, pos: decode_step(cfg, p, c, t, pos)
-    )
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    out_tokens = [tok]
-    t1 = time.perf_counter()
-    for i in range(args.steps - 1):
-        logits, cache = step_fn(params, cache, tok, jnp.int32(args.prompt_len + i))
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits[:, -1] / args.temperature
-            )[:, None].astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t1
+        step_fn = jax.jit(
+            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos)
+        )
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        out_tokens = [tok]
+        step_secs = []
+        for i in range(args.steps - 1):
+            with obs.timed("decode_step", step=i) as t_step:
+                logits, cache = step_fn(params, cache, tok,
+                                        jnp.int32(args.prompt_len + i))
+                if args.temperature > 0:
+                    key, sub = jax.random.split(key)
+                    tok = jax.random.categorical(
+                        sub, logits[:, -1] / args.temperature
+                    )[:, None].astype(jnp.int32)
+                else:
+                    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+                jax.block_until_ready(tok)
+            step_secs.append(t_step.seconds)
+            out_tokens.append(tok)
+    t_decode = sum(step_secs)
 
     toks = np.asarray(jnp.concatenate(out_tokens, axis=1))
     tps = args.batch * (args.steps - 1) / max(t_decode, 1e-9)
+    pct = obs.percentiles(step_secs)
     print(f"[serve] arch={cfg.name} batch={args.batch} "
           f"prefill={t_prefill*1e3:.1f}ms decode={t_decode*1e3:.1f}ms "
           f"({tps:.1f} tok/s)")
+    print(f"[serve] decode step p50={pct['p50']*1e3:.2f}ms "
+          f"p99={pct['p99']*1e3:.2f}ms over {len(step_secs)} steps")
     print(f"[serve] sample token ids: {toks[0, :12].tolist()}")
 
 

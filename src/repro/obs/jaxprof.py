@@ -1,0 +1,61 @@
+"""Optional ``jax.profiler`` hooks: attribute device time to tree levels.
+
+The span tree measures host wall time; to see *device* time per solve in
+a real profiler, set ``REPRO_OBS_JAX=1`` and the instrumented solve
+sites wrap themselves in ``jax.profiler.TraceAnnotation`` — the names
+then show up in a ``jax.profiler.trace`` / TensorBoard / Perfetto
+capture nested exactly like the host spans.  Default is off: the hooks
+must cost nothing in ordinary runs, and annotation inside jitted code
+only pays off when a device trace is actually being captured.
+
+``maybe_start_trace``/``maybe_stop_trace`` bracket a whole capture
+(``REPRO_OBS_JAX_DIR`` names the output directory); both are no-ops when
+the env gate is off or jax.profiler is unavailable.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+
+
+def _jax_enabled() -> bool:
+    return os.environ.get("REPRO_OBS_JAX", "").strip().lower() in (
+        "1", "on", "true", "yes")
+
+
+def annotate(name: str):
+    """``jax.profiler.TraceAnnotation(name)`` when ``REPRO_OBS_JAX=1``,
+    else a free null context."""
+    if not _jax_enabled():
+        return contextlib.nullcontext()
+    try:
+        import jax.profiler
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:
+        return contextlib.nullcontext()
+
+
+def maybe_start_trace(log_dir: str | None = None) -> bool:
+    """Start a device-profiler capture if ``REPRO_OBS_JAX=1``.  Returns
+    True when a capture actually started (pair with maybe_stop_trace)."""
+    if not _jax_enabled():
+        return False
+    try:
+        import jax.profiler
+        jax.profiler.start_trace(
+            log_dir or os.environ.get("REPRO_OBS_JAX_DIR", "runs/jaxprof"))
+        return True
+    except Exception:
+        return False
+
+
+def maybe_stop_trace(started: bool = True) -> None:
+    """Stop the capture started by :func:`maybe_start_trace`."""
+    if not started or not _jax_enabled():
+        return
+    try:
+        import jax.profiler
+        jax.profiler.stop_trace()
+    except Exception:
+        pass

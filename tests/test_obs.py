@@ -1,0 +1,274 @@
+"""repro.obs contract tests: span nesting, the disabled fast path,
+metric merge semantics, manifest round-trip, and REPRO_OBS=off parity
+(the pipeline must be bit-for-bit identical with tracing off)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import PartitionPipeline
+from repro.dist.partition_aware import plan_halo_sharding
+from repro.mesh import dual_graph, pebble_mesh
+
+
+@pytest.fixture(autouse=True)
+def _obs_on():
+    """Every test starts with tracing on and an empty span stack."""
+    prev = obs.set_enabled(True)
+    yield
+    obs.set_enabled(prev)
+
+
+# ---------------------------------------------------------------------------
+# Span tree: nesting, ordering, timing
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_ordering():
+    with obs.trace("root", run=1) as root:
+        with obs.span("a"):
+            obs.counter_add("hits", 2)
+            with obs.span("a1"):
+                pass
+            with obs.span("a2"):
+                pass
+        with obs.span("b"):
+            pass
+    assert [c.name for c in root.children] == ["a", "b"]
+    a = root.find("a")
+    assert [c.name for c in a.children] == ["a1", "a2"]
+    assert a.counters == {"hits": 2.0}
+    assert root.tags == {"run": 1}
+    # pre-order walk
+    assert [s.name for s in root.walk()] == ["root", "a", "a1", "a2", "b"]
+    # children nest inside the parent's time window
+    assert a.t0 >= root.t0 and a.t1 <= root.t1 + 1e-9
+    assert root.seconds >= a.seconds
+
+
+def test_timed_measures_inside_and_outside_traces():
+    with obs.trace("root") as root:
+        with obs.timed("work") as t:
+            pass
+        assert isinstance(t, obs.Span)
+    assert root.find("work") is t
+    # outside any trace: a plain timer, nothing recorded anywhere
+    with obs.timed("loose") as t2:
+        pass
+    assert not isinstance(t2, obs.Span)
+    assert t2.seconds >= 0.0
+
+
+def test_exception_pops_span_stack():
+    with pytest.raises(RuntimeError):
+        with obs.trace("root"):
+            with obs.span("inner"):
+                raise RuntimeError("boom")
+    assert obs.current_span() is None
+
+
+# ---------------------------------------------------------------------------
+# Disabled mode: the zero-allocation fast path
+# ---------------------------------------------------------------------------
+
+def test_disabled_span_is_shared_noop_singleton():
+    with obs.disabled():
+        s1 = obs.span("x")
+        s2 = obs.span("y", tag=1)
+        assert s1 is obs.NOOP_SPAN and s2 is obs.NOOP_SPAN
+        with s1:
+            pass
+        assert obs.current_span() is None
+        # trace/timed degrade to timers that still measure wall time
+        with obs.trace("root") as t:
+            pass
+        assert not isinstance(t, obs.Span)
+        obs.counter_add("nope")          # must not raise, must not record
+        obs.gauge_set("nope", 1)
+        obs.gauge_max("nope", 1)
+    # span() outside any trace is also the no-op singleton (enabled mode)
+    assert obs.span("loose") is obs.NOOP_SPAN
+
+
+# ---------------------------------------------------------------------------
+# Counter / gauge merge semantics
+# ---------------------------------------------------------------------------
+
+def test_counters_sum_over_subtree():
+    with obs.trace("root") as root:
+        obs.counter_add("fm_moves", 3)
+        with obs.span("child"):
+            obs.counter_add("fm_moves", 4)
+    assert root.total_counters()["fm_moves"] == 7.0
+
+
+def test_gauge_aggregation_follows_registry():
+    # residual_max/amg_levels are max-gauges, edge_cut is last-write
+    with obs.trace("root") as root:
+        obs.gauge_max("residual_max", 0.5)
+        obs.gauge_set("edge_cut", 100.0)
+        with obs.span("child"):
+            obs.gauge_max("residual_max", 0.2)
+            obs.gauge_set("edge_cut", 80.0)
+            obs.gauge_set("amg_levels", 4)
+    total = root.total_counters()
+    assert total["residual_max"] == 0.5      # max over subtree
+    assert total["edge_cut"] == 80.0         # last write wins
+    assert total["amg_levels"] == 4
+
+
+def test_gauge_max_within_one_span():
+    with obs.trace("root") as root:
+        obs.gauge_max("residual_max", 0.1)
+        obs.gauge_max("residual_max", 0.3)
+        obs.gauge_max("residual_max", 0.2)
+    assert root.gauges["residual_max"] == 0.3
+
+
+def test_merge_metrics_unregistered_defaults():
+    # unregistered counters sum; unregistered gauges default to max
+    dst = {}
+    obs.merge_metrics(dst, {"custom": 1.0}, kind="counter")
+    obs.merge_metrics(dst, {"custom": 2.0}, kind="counter")
+    assert dst["custom"] == 3.0
+    g = {}
+    obs.merge_metrics(g, {"g": 1.0}, kind="gauge")
+    obs.merge_metrics(g, {"g": 0.5}, kind="gauge")
+    assert g["g"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Manifest round-trip + validation
+# ---------------------------------------------------------------------------
+
+def test_manifest_round_trip(tmp_path):
+    with obs.trace("partition", nparts=4) as root:
+        with obs.span("bisect:rsb-batched"):
+            obs.counter_add("fiedler_solves", 3)
+            obs.gauge_set("amg_levels", 2)
+    path = str(tmp_path / "run.jsonl")
+    config = {"pre": "none", "bisect": "rsb-batched", "post": []}
+    obs.write_manifest(root, path, name="t", config=config)
+    header, loaded = obs.load_manifest(path)
+    assert header["schema"] == obs.SCHEMA
+    assert header["config"] == config
+    assert header["totals"]["metrics"]["fiedler_solves"] == 3.0
+    assert [s.name for s in loaded.walk()] == [s.name for s in root.walk()]
+    b = loaded.find("bisect:rsb-batched")
+    assert b.counters == {"fiedler_solves": 3.0}
+    assert b.gauges == {"amg_levels": 2}
+    assert loaded.tags == {"nparts": 4}
+    assert abs(loaded.seconds - root.seconds) < 1e-9
+    # every line is valid JSON (it is a JSONL file, not a JSON file)
+    with open(path) as f:
+        for line in f:
+            json.loads(line)
+
+
+def test_validate_manifest_flags_missing_stage_span(tmp_path):
+    with obs.trace("partition") as root:
+        with obs.span("pre:rcb"):
+            pass
+    path = str(tmp_path / "bad.jsonl")
+    obs.write_manifest(root, path, name="t", config={
+        "pre": "rcb", "bisect": "rsb-batched", "post": ["repair"]})
+    problems = obs.validate_manifest(path)
+    missing = {p.split("'")[1] for p in problems if "missing span" in p}
+    assert missing == {"bisect:rsb-batched", "solve", "split", "post:repair"}
+
+
+def test_expected_span_names_from_config():
+    names = obs.expected_span_names(
+        {"pre": "none", "bisect": "rcb", "post": ["repair", "kway"]})
+    assert names == {"partition", "bisect:rcb", "post:repair", "post:kway"}
+
+
+# ---------------------------------------------------------------------------
+# Pipeline integration + REPRO_OBS=off parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_mesh():
+    return pebble_mesh(6, 6, 6, n_pebbles=2, seed=3)
+
+
+def test_pipeline_records_trace_and_manifest(small_mesh, tmp_path):
+    pipe = PartitionPipeline(pre="rcb", bisect="rsb-batched",
+                             post=("repair", "refine"))
+    ctx = pipe.run(small_mesh, 4)
+    root = ctx.trace
+    assert root is not None and root.name == "partition"
+    for name in obs.expected_span_names(ctx.config):
+        assert root.find(name) is not None, name
+    # stage spans and StageRecords agree on the wall clock
+    for rec in ctx.stages:
+        span = root.find(f"{rec.kind}:{rec.name}")
+        assert span is not None
+        assert abs(span.seconds - rec.seconds) < 0.05
+    path = ctx.export_manifest(str(tmp_path / "m.jsonl"))
+    assert obs.validate_manifest(path) == []
+    tpath = ctx.export_trace_events(str(tmp_path / "t.json"))
+    events = json.load(open(tpath))["traceEvents"]
+    assert {e["name"] for e in events} >= {"partition", "solve", "split"}
+
+
+def test_repro_obs_off_parity(small_mesh):
+    pipe = PartitionPipeline(pre="rcb", bisect="rsb-batched",
+                             post=("repair", "refine"))
+    ctx_on = pipe.run(small_mesh, 4)
+    with obs.disabled():
+        ctx_off = pipe.run(small_mesh, 4)
+    # identical labels, no trace, but every report timing still populated
+    assert np.array_equal(ctx_on.parts, ctx_off.parts)
+    assert ctx_off.trace is None
+    assert ctx_off.report.seconds > 0
+    assert ctx_off.report.post.seconds > 0
+    assert all(lv.solve_seconds > 0 for lv in ctx_off.report.levels)
+    assert all(s.seconds >= 0 for s in ctx_off.stages)
+    assert ctx_off.stats().keys() == ctx_on.stats().keys()
+
+
+def test_repro_obs_dir_auto_manifest(small_mesh, tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_OBS_DIR", str(tmp_path))
+    PartitionPipeline(bisect="rcb", post=()).run(small_mesh, 4)
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".jsonl")]
+    assert len(files) == 1
+    assert obs.validate_manifest(str(tmp_path / files[0])) == []
+
+
+def test_recursive_engine_split_seconds(small_mesh):
+    # satellite fix: the recursive path used to hardcode split_seconds=0
+    pipe = PartitionPipeline(pre="rcb", bisect="rsb-recursive", post=())
+    ctx = pipe.run(small_mesh, 4)
+    assert all(lv.split_seconds > 0 for lv in ctx.report.levels)
+    assert all(r.split_seconds > 0 for r in ctx.report.records)
+
+
+def test_halo_plan_emits_wire_volume(small_mesh):
+    graph = dual_graph(small_mesh)
+    parts = np.arange(graph.n) % 4
+    with obs.trace("root") as root:
+        plan = plan_halo_sharding(graph, parts, 4)
+    assert root.counters["halo_words"] == plan.collective_words_per_feature
+    assert root.counters["halo_bytes"] == 4.0 * plan.collective_words_per_feature
+    assert root.gauges["halo_max_degree"] == plan.halo
+
+
+def test_report_to_dict_round_trip(small_mesh):
+    ctx = PartitionPipeline(pre="rcb", bisect="rsb-batched").run(small_mesh, 4)
+    d = ctx.report.to_dict()
+    json.dumps(d)                  # fully JSON-able
+    assert d["total_iterations"] == ctx.report.total_iterations
+    assert d["precond_levels"] == ctx.report.precond_levels
+    assert d["post"]["cut_after"] <= d["post"]["cut_before"]
+    assert len(d["levels"]) == len(ctx.report.levels)
+
+
+def test_percentiles_nearest_rank():
+    secs = [float(i) for i in range(101)]
+    p = obs.percentiles(secs)
+    assert p["p50"] == 50.0
+    assert p["p99"] == 99.0
+    assert obs.percentiles([]) == {"p50": 0.0, "p99": 0.0}
