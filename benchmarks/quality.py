@@ -12,7 +12,9 @@ bisection with the post stage stripped (recorded from the pipeline's
 bisection refined by the hill-climbing k-way FM chain instead of the
 greedy sweeps (`run_post_stages` on `parts_raw` — still no second solve),
 so raw-vs-greedy-vs-kway is a pure post-stage comparison.  Every row
-records `disconnected` parts and the post stage's wall clock.
+records `disconnected` parts and the post stage's wall clock.  The
+`multilevel` row runs the METIS-style k-way V-cycle (bisect="multilevel")
+under its preset repair+kway chain on the same mesh.
 """
 
 from __future__ import annotations
@@ -100,6 +102,18 @@ def run(dims=(12, 12, 12), nparts=16, full: bool = False) -> list:
                        dt - ctx.report.post.seconds + k_dt, engine=engine,
                        report=ctx.report, refine="repair+kway",
                        post_seconds=k_dt)
+    # The multilevel k-way V-cycle under its preset post chain: the
+    # cross-partitioner quality row for the METIS-style engine (same mesh,
+    # same nparts — directly comparable to the rsb_* rows above).
+    pipe = PartitionPipeline(pre="none", bisect="multilevel",
+                             post=("repair", "kway"))
+    t0 = time.perf_counter()
+    ctx = pipe.run(mesh, nparts)
+    dt = time.perf_counter() - t0
+    record("multilevel", ctx.parts, dt, engine="multilevel",
+           report=ctx.report, refine="repair+kway",
+           post_seconds=ctx.report.post.seconds,
+           stages=stage_seconds(ctx))
     for name in ("rcb", "rib", "sfc", "random"):
         t0 = time.perf_counter()
         parts = partition(mesh, nparts, partitioner=name)

@@ -14,9 +14,10 @@ Tables ↔ paper:
   roofline        — §Roofline table from cached dry-run artifacts
 
 ``--json PATH`` writes the partition tables (plus an `engine_speedup`
-summary row — rsb_batched vs rsb_recursive wall clock — and the
-`partition_time_smoke` baseline the CI gate compares against) to PATH in
-the BENCH_partition.json layout.
+summary row — rsb_batched vs rsb_recursive wall clock — the
+`partition_time_smoke` baseline the CI gate compares against, and the
+`partition_large` multilevel-vs-spectral head-to-head rows the gate's
+check_multilevel reads) to PATH in the BENCH_partition.json layout.
 """
 
 from __future__ import annotations
@@ -163,6 +164,7 @@ def main() -> None:
     quality_rows: list = []
     partition_rows: list = []
     smoke_rows: list = []
+    large_rows: list = []
     if want("quality"):
         from benchmarks import quality
 
@@ -177,6 +179,10 @@ def main() -> None:
             # Fresh-process min-of-3, matching smoke_check's measurement
             # conditions exactly — see _smoke_baseline_rows.
             smoke_rows = _smoke_baseline_rows()
+            # Large-mesh engine head-to-head behind the multilevel claim;
+            # smoke_check gates these recorded rows instead of re-running
+            # the ~10x mesh on every push.
+            large_rows = partition_time.run_large()
     if want("weak_scaling"):
         from benchmarks import weak_scaling
 
@@ -204,6 +210,7 @@ def main() -> None:
             "quality": quality_rows,
             "partition_time": partition_rows,
             "partition_time_smoke": smoke_rows,
+            "partition_large": large_rows,
             "engine_speedup": _engine_speedup(quality_rows, partition_rows),
         }
         with open(args.json, "w") as f:

@@ -13,7 +13,13 @@ or if the refine-stage invariants fail WITHIN the current run:
   * the greedy post stage's summed wall clock exceeds 15% of the summed
     total, or the kway rows' summed post stage exceeds 25% of their summed
     row totals (summed, not per row: the fastest solve's row is pure
-    measurement noise at the ~100 ms post scale of this box).
+    measurement noise at the ~100 ms post scale of this box),
+
+or if the multilevel-engine contract fails (check_multilevel): the smoke
+multilevel row's cut must stay within 5% of the BEST spectral kway cut,
+and the checked-in `partition_large` baseline rows must uphold the
+headline claim — multilevel wall ≤ half the spectral wall at ≤5% cut
+regression with zero disconnected parts.
 
     PYTHONPATH=src python -m benchmarks.smoke_check [--baseline PATH]
 
@@ -68,6 +74,8 @@ WALL_TOLERANCE = 1.25  # total: fail if summed seconds > 125% of baseline
 POST_FRACTION = 0.15   # greedy post wall clock ≤ 15% of the summed total
 KWAY_POST_FRACTION = 0.25  # summed kway post ≤ 25% of summed kway row wall
 STAGE_SHARE_TOLERANCE = 0.15  # per-stage share of wall may grow ≤ 15 points
+MULTILEVEL_CUT_TOL = 1.05  # multilevel cut ≤ 105% of the spectral cut
+MULTILEVEL_WALL_FRACTION = 0.5  # large row: ml wall ≤ half spectral wall
 
 
 def _key(row) -> tuple:
@@ -167,6 +175,55 @@ def check_stage_shares(rows, base_rows) -> list:
     return failures
 
 
+def check_multilevel(rows, large_rows) -> list:
+    """The multilevel bisect stage's contract.  In the current smoke run:
+    the V-cycle's refined row must exist and its cut must stay within
+    MULTILEVEL_CUT_TOL of the BEST batched repair+kway cut (the quality
+    claim is "spectral-class cuts", so the gate compares against the
+    strongest spectral configuration, not the weakest).  From the recorded
+    ``partition_large`` baseline (benchmarks.run --json measures it; the
+    rows are too slow to re-run on every push): the headline claim itself —
+    multilevel wall ≤ MULTILEVEL_WALL_FRACTION of the spectral wall at
+    ≤ MULTILEVEL_CUT_TOL cut with zero disconnected parts — so a baseline
+    refresh that silently loses the speedup or the quality fails CI."""
+    failures = []
+    ml = [r for r in rows if r.get("engine") == "multilevel"
+          and r.get("refine") == "repair+kway"]
+    if not ml:
+        failures.append("no multilevel repair+kway smoke row")
+    batched = [r["cut"] for r in rows if r.get("engine") == "batched"
+               and r.get("refine") == "repair+kway"]
+    if ml and batched:
+        best = min(batched)
+        for r in ml:
+            if r["cut"] > MULTILEVEL_CUT_TOL * best:
+                failures.append(
+                    f"multilevel cut {r['cut']:.0f} > "
+                    f"{MULTILEVEL_CUT_TOL:.2f}x best spectral kway cut "
+                    f"{best:.0f}")
+    by_bisect = {r.get("bisect"): r for r in large_rows}
+    sp = by_bisect.get("rsb-batched")
+    mlr = by_bisect.get("multilevel")
+    if sp is None or mlr is None:
+        failures.append("partition_large baseline is missing an engine row "
+                        "(regenerate with benchmarks.run --json)")
+        return failures
+    if mlr["seconds"] > MULTILEVEL_WALL_FRACTION * sp["seconds"]:
+        failures.append(
+            f"large-mesh multilevel wall {mlr['seconds']:.2f}s > "
+            f"{MULTILEVEL_WALL_FRACTION:.0%} of spectral "
+            f"{sp['seconds']:.2f}s")
+    if mlr["cut"] > MULTILEVEL_CUT_TOL * sp["cut"]:
+        failures.append(
+            f"large-mesh multilevel cut {mlr['cut']:.0f} > "
+            f"{MULTILEVEL_CUT_TOL:.2f}x spectral {sp['cut']:.0f}")
+    if mlr.get("disconnected", 0) != 0:
+        failures.append(
+            f"large-mesh multilevel row has {mlr['disconnected']} "
+            f"disconnected part(s)")
+    return failures
+
+
 def check_manifest(manifest_path: str, trace_path: str) -> list:
     """Write + validate a run manifest for a representative quality-kway
     pipeline run — the drift guard.  A deleted/renamed stage span, an
@@ -188,9 +245,21 @@ def check_manifest(manifest_path: str, trace_path: str) -> list:
     ctx.export_manifest(manifest_path, name="smoke-quality-kway")
     ctx.export_trace_events(trace_path)
     problems = obs.validate_manifest(manifest_path)
-    print(f"manifest {manifest_path} "
+    # Same guard for the multilevel V-cycle's spans (coarsen / coarsest /
+    # mlevel:N / finalize) — a second manifest from the same small mesh.
+    ml_manifest = manifest_path.replace(".jsonl", "_multilevel.jsonl")
+    ml_trace = trace_path.replace(".json", "_multilevel.json")
+    ctx = PartitionPipeline(pre="none", bisect="multilevel",
+                            post=("repair", "kway")).run(mesh, 8)
+    if ctx.trace is None:
+        problems.append("multilevel run recorded no trace")
+    else:
+        ctx.export_manifest(ml_manifest, name="smoke-multilevel")
+        ctx.export_trace_events(ml_trace)
+        problems += obs.validate_manifest(ml_manifest)
+    print(f"manifests {manifest_path}, {ml_manifest} "
           f"({'OK' if not problems else 'INVALID'}), "
-          f"trace {trace_path}", file=sys.stderr)
+          f"traces {trace_path}, {ml_trace}", file=sys.stderr)
     return problems
 
 
@@ -234,6 +303,12 @@ def main() -> int:
 
     for msg in check_refine_invariants(rows, warm):
         print(f"REFINE-GATE {msg}", file=sys.stderr)
+        failed = True
+
+    # Multilevel engine contract: smoke-run quality vs the spectral rows,
+    # plus the recorded large-mesh headline claim from the baseline.
+    for msg in check_multilevel(rows, baseline.get("partition_large", [])):
+        print(f"MULTILEVEL-GATE {msg}", file=sys.stderr)
         failed = True
 
     # Per-stage wall shares: warm rows against the baseline's stage maps.

@@ -29,6 +29,13 @@ class ParRSBConfig:
     kway_passes: int = 8
     balance_tol: float = 0.05
     pipeline: str = "default"
+    # Multilevel V-cycle knobs (bisect="multilevel"): coarsen to
+    # ~coarse_factor*nparts nodes; per-level boundary FM is capped at
+    # ml_refine_passes sweeps with a tight stall so refinement stays
+    # O(boundary) at every level.
+    coarse_factor: int = 8
+    ml_refine_passes: int = 2
+    ml_stall: int = 32
 
 
 def make_config() -> ParRSBConfig:
@@ -52,10 +59,16 @@ PIPELINE_PRESETS: dict = {
                     post=("repair", "refine")),
     # Raw bisection labels (PR 3 behaviour) — parity baselines, debugging.
     "raw": dict(pre="rcb", bisect="rsb-batched", post=()),
-    # Quality-first: inertial per-level reorder, deeper FM schedule.
+    # Quality-first: inertial per-level reorder, hill-climbing k-way FM
+    # post chain with a deeper climb and tighter corridor.  The post chain
+    # flipped from greedy sweeps to repair+kway once the multilevel bisect
+    # stage landed (PR 5's core/README.md rationale: with a cheap bisector
+    # available, post wall-share is negligible and the stronger refiner
+    # wins on every bench combination); the greedy chain remains the
+    # default for "default"/"raw"-style fast presets.
     "quality": dict(pre="rib", bisect="rsb-batched",
-                    post=("repair", "refine"),
-                    post_kw=dict(sweeps=8, balance_tol=0.03)),
+                    post=("repair", "kway"),
+                    post_kw=dict(passes=12, balance_tol=0.03)),
     # Geometry-only fast path: RCB labels healed by the post stage — no
     # eigensolves at all (Kong et al.'s point: the repair/balance stage is
     # where the cheap-bisector pipelines earn their keep).
@@ -72,6 +85,19 @@ PIPELINE_PRESETS: dict = {
     "quality-kway": dict(pre="rib", bisect="rsb-batched",
                          post=("repair", "kway"),
                          post_kw=dict(passes=12, balance_tol=0.03)),
+    # Multilevel k-way V-cycle (repro.core.multilevel): coarsen →
+    # partition-coarsest → prolong+refine, no eigensolves on the fine
+    # graph — the raw-speed engine at scale.  Knobs come from the config
+    # (coarse_factor/ml_stall/ml_refine_passes) via make_pipeline.
+    "multilevel": dict(pre="none", bisect="multilevel",
+                       post=("repair", "kway")),
+    # Quality-leaning V-cycle: coarser target (shallower ladder), more
+    # refinement per level, deeper final climb.
+    "multilevel-quality": dict(pre="none", bisect="multilevel",
+                               post=("repair", "kway"),
+                               bisect_kw=dict(coarse_factor=16,
+                                              refine_passes=4, stall=128),
+                               post_kw=dict(passes=12, balance_tol=0.03)),
 }
 
 
@@ -96,5 +122,14 @@ def make_pipeline(preset: str | None = None, *,
                    balance_tol=cfg.balance_tol)
     post_kw.update(spec.pop("post_kw", {}))
     post_kw.update(overrides.pop("post_kw", {}))
+    bisect_kw = {}
+    if spec.get("bisect") == "multilevel":
+        # V-cycle presets get their base knobs from the config, same
+        # layering as post_kw: preset bisect_kw overrides, caller wins.
+        bisect_kw = dict(coarse_factor=cfg.coarse_factor,
+                         refine_passes=cfg.ml_refine_passes,
+                         stall=cfg.ml_stall, balance_tol=cfg.balance_tol)
+    bisect_kw.update(spec.pop("bisect_kw", {}))
+    bisect_kw.update(overrides.pop("bisect_kw", {}))
     spec.update(overrides)
-    return PartitionPipeline(post_kw=post_kw, **spec)
+    return PartitionPipeline(post_kw=post_kw, bisect_kw=bisect_kw, **spec)

@@ -24,7 +24,7 @@ from repro.core.inverse_iteration import (inverse_iteration,
                                           InverseIterInfo,
                                           BatchedInverseIterInfo)
 from repro.core.amg import (AMG, BatchedAMG, amg_setup, amg_setup_batched,
-                            coarsen_graph)
+                            coarsen_graph, heavy_edge_matching)
 from repro.core.rcb import rcb_order, rib_order, rcb_parts, rib_parts
 from repro.core.sfc import sfc_parts, sfc_order, hilbert_index, morton_index
 from repro.core.fiedler import (fiedler_from_graph, fiedler_from_mesh, FiedlerResult,
@@ -52,7 +52,13 @@ from repro.core.kway import (
     KwayPassRecord,
     KwayStats,
     kway_fm,
+    kway_fm_boundary,
     kway_stage,
+)
+from repro.core.multilevel import (
+    MLLevel,
+    MultilevelStats,
+    multilevel_partition,
 )
 from repro.core.pipeline import (
     PartitionContext,

@@ -126,6 +126,7 @@ def kway_fm(
     balance_tol: float = 0.05,
     corridor: tuple | None = None,
     stall: int | None = None,
+    nodes: np.ndarray | None = None,
 ) -> tuple[np.ndarray, PostStats]:
     """Hill-climbing k-way FM (module docstring).  Cut-non-increasing: a
     pass is rolled back to its best prefix, so the returned cut is the
@@ -137,6 +138,15 @@ def kway_fm(
     the stage stays a small fraction of the solve wall; deep ridges past
     the stall horizon are reachable by raising it.  Passes end early when
     a full pass keeps no move.
+
+    ``nodes`` restricts the movable set: only the listed nodes get conn
+    rows, heap entries, or moves — everything else is frozen scenery whose
+    edges still contribute to gains.  The mutable mirrors (conn table,
+    adjacency, locks) are sized to the candidate set, so the per-pass cost
+    is O(candidates · (degree + nparts)) plus one vectorized edge sweep —
+    what makes boundary-restricted refinement O(boundary), not O(n).  With
+    ``nodes=None`` the compact indexing is the identity and behavior is
+    exactly the unrestricted stage.
     """
     parts_np = np.asarray(parts, dtype=np.int64).copy()
     n = graph.n
@@ -144,6 +154,13 @@ def kway_fm(
             else np.asarray(weights, np.float64))
     rows, ew = graph.rows, graph.weights
     indptr, nbrs = graph.indptr, graph.indices
+    if nodes is None:
+        cand, pos = np.arange(n, dtype=np.int64), None
+    else:
+        cand = np.unique(np.asarray(nodes, dtype=np.int64))
+        pos = np.full(n, -1, dtype=np.int64)
+        pos[cand] = np.arange(cand.size, dtype=np.int64)
+    m = cand.size
     part_w_np = _part_weights(parts_np, w_np, nparts)
     if corridor is None:
         corridor = _balance_corridor(part_w_np, balance_tol)
@@ -155,27 +172,46 @@ def kway_fm(
     with obs.timed("kway_fm") as t:
         cut = stats.cut_before
         if stall is None:
-            stall = max(64, n // 8)
+            stall = max(64, m // 8)
 
         # Plain-Python mirrors of the mutable state (module docstring: scalar
-        # updates beat numpy dispatch at degree-sized granularity).
-        parts_l = parts_np.tolist()
-        w_l = w_np.tolist()
+        # updates beat numpy dispatch at degree-sized granularity).  All of
+        # them are indexed by candidate position; part weights/counts stay
+        # global (frozen nodes still occupy their parts).
+        if pos is None:
+            parts_l = parts_np.tolist()
+            w_l = w_np.tolist()
+        else:
+            parts_l = parts_np[cand].tolist()
+            w_l = w_np[cand].tolist()
         part_w = part_w_np.tolist()
         part_n = np.bincount(parts_np, minlength=nparts).tolist()
-        nbrs_l, ew_l, off = nbrs.tolist(), ew.tolist(), indptr.tolist()
-        adj = [list(zip(nbrs_l[off[i]:off[i + 1]], ew_l[off[i]:off[i + 1]]))
-               for i in range(n)]
+        if pos is None:
+            nbrs_l, ew_l, off = nbrs.tolist(), ew.tolist(), indptr.tolist()
+            adj = [list(zip(nbrs_l[off[i]:off[i + 1]],
+                            ew_l[off[i]:off[i + 1]]))
+                   for i in range(n)]
+        else:
+            # Neighbor ids remapped to candidate positions (-1 = frozen):
+            # per-candidate-row slices, so building this is O(Σ deg(cand)).
+            adj = [list(zip(pos[nbrs[indptr[i]:indptr[i + 1]]].tolist(),
+                            ew[indptr[i]:indptr[i + 1]].tolist()))
+                   for i in cand.tolist()]
         prange = range(nparts)
 
         for pass_no in range(passes):
             # Dense per-(node, part) connection table, one vectorized build,
             # then scalar increments only.
-            conn_np = np.zeros((n, nparts))
-            np.add.at(conn_np, (rows, parts_np[graph.indices]), ew)
+            conn_np = np.zeros((m, nparts))
+            if pos is None:
+                np.add.at(conn_np, (rows, parts_np[nbrs]), ew)
+            else:
+                sel = pos[rows] >= 0
+                np.add.at(conn_np, (pos[rows[sel]], parts_np[nbrs[sel]]),
+                          ew[sel])
             conn = conn_np.tolist()
-            locked = [False] * n
-            ver = [0] * n   # conn-row version stamps
+            locked = [False] * m
+            ver = [0] * m   # conn-row version stamps
             heap: list = []
             seq = 0  # FIFO tiebreak keeps equal-gain pops deterministic
 
@@ -204,14 +240,19 @@ def kway_fm(
                     seq += 1
 
             total = np.bincount(rows, weights=ew, minlength=n)
-            own_all = conn_np[np.arange(n), parts_np]
-            for i in np.flatnonzero(total - own_all > _EPS).tolist():
+            if pos is None:
+                own_all = conn_np[np.arange(n), parts_np]
+                frontier = np.flatnonzero(total - own_all > _EPS)
+            else:
+                own_all = conn_np[np.arange(m), parts_np[cand]]
+                frontier = np.flatnonzero(total[cand] - own_all > _EPS)
+            for i in frontier.tolist():
                 push(i)  # boundary frontier
 
             move_log: list = []   # (node, src, tgt, gain)
             run_cut = best_cut = cut
             best_idx = 0
-            pops, max_pops = 0, 50 * n + 1000  # lazy-heap runaway backstop
+            pops, max_pops = 0, 50 * m + 1000  # lazy-heap runaway backstop
             while heap and pops < max_pops:
                 pops += 1
                 neg_gain, _, i, tgt, entry_ver = heapq.heappop(heap)
@@ -245,8 +286,11 @@ def kway_fm(
                 if run_cut < best_cut - _EPS:
                     best_cut, best_idx = run_cut, len(move_log)
                 # O(degree) incremental gain update: only the mover's
-                # neighbors' connections to (src, tgt) changed.
+                # neighbors' connections to (src, tgt) changed.  j < 0 is
+                # a frozen neighbor (nodes= restriction): no conn row.
                 for j, wij in adj[i]:
+                    if j < 0:
+                        continue
                     row = conn[j]
                     row[src] -= wij
                     row[tgt] += wij
@@ -265,7 +309,10 @@ def kway_fm(
                 part_w[tgt] -= w_l[i]
                 part_n[src] += 1
                 part_n[tgt] -= 1
-            parts_np = np.asarray(parts_l, dtype=np.int64)
+            if pos is None:
+                parts_np = np.asarray(parts_l, dtype=np.int64)
+            else:
+                parts_np[cand] = parts_l
             kstats.passes += 1
             kstats.moves_attempted += attempted
             kstats.moves_kept += best_idx
@@ -287,6 +334,55 @@ def kway_fm(
     obs.counter_add("fm_moves", kstats.moves_kept)
     obs.counter_add("fm_rollbacks", kstats.rolled_back)
     return parts_np, stats
+
+
+def kway_fm_boundary(
+    graph: Graph,
+    parts: np.ndarray,
+    nparts: int,
+    *,
+    weights: np.ndarray | None = None,
+    passes: int = 2,
+    balance_tol: float = 0.05,
+    corridor: tuple | None = None,
+    stall: int = 32,
+) -> tuple[np.ndarray, PostStats]:
+    """Boundary-restricted hill-climbing FM — the multilevel V-cycle's
+    per-level refinement.  Each pass recomputes the boundary frontier
+    (nodes with at least one cut edge) and runs ONE :func:`kway_fm` pass
+    restricted to it (``nodes=``), so per-pass cost is
+    O(boundary · (degree + nparts)) instead of O(n · nparts): on a freshly
+    prolonged partition the boundary is a thin shell of the graph.  The
+    ``stall`` default is deliberately tight (32, vs ``kway_fm``'s n//8):
+    this sweep runs at EVERY ladder level, so each one must stay cheap —
+    deep climbs belong to the final post chain, not the ladder."""
+    parts = np.asarray(parts, dtype=np.int64).copy()
+    if corridor is None:
+        corridor = balance_corridor(parts, nparts, weights, balance_tol)
+    agg = PostStats(stages=["kway"], corridor=tuple(corridor),
+                    kway=KwayStats(), cut_before=edge_cut(graph, parts))
+    rows, cols = graph.rows, graph.indices
+    for _ in range(passes):
+        boundary = rows[parts[rows] != parts[cols]]
+        if boundary.size == 0:
+            break
+        parts, st = kway_fm(graph, parts, nparts, weights=weights,
+                            passes=1, corridor=corridor, stall=stall,
+                            nodes=boundary)
+        k = st.kway
+        for rec in k.records:
+            rec.pass_no = len(agg.kway.records)
+            agg.kway.records.append(rec)
+        agg.kway.passes += k.passes
+        agg.kway.moves_attempted += k.moves_attempted
+        agg.kway.moves_kept += k.moves_kept
+        agg.kway.rolled_back += k.rolled_back
+        agg.moves_applied += st.moves_applied
+        agg.seconds += st.seconds
+        if st.moves_applied == 0:
+            break
+    agg.cut_after = edge_cut(graph, parts)
+    return parts, agg
 
 
 def kway_stage(

@@ -14,9 +14,12 @@ stack:
     "sfc" applies ONE global space-filling-curve permutation up front (the
     ordering bootstrap for the order-following multilevel hierarchy).
     Geometric bisect stages are their own geometry and ignore ``pre``.
-  - ``bisect`` ∈ {"rsb-batched", "rsb-recursive", "rcb", "rib", "sfc",
-    "random"} — a registered stage producing the labels (the geometric
-    partitioners are ordinary stages here, not special cases).
+  - ``bisect`` ∈ {"rsb-batched", "rsb-recursive", "multilevel", "rcb",
+    "rib", "sfc", "random"} — a registered stage producing the labels (the
+    geometric partitioners are ordinary stages here, not special cases;
+    "multilevel" is the METIS-style coarsen→partition→prolong+refine
+    V-cycle in :mod:`repro.core.multilevel` — no eigensolves on the fine
+    graph, the raw-speed engine at scale).
   - ``post``   — an ordered tuple of registered refiners, by default
     ``("repair", "refine")``: connected-component repair then greedy
     weighted FM boundary sweeps (:mod:`repro.core.refine`), both
@@ -233,6 +236,16 @@ def _random_stage(ctx: PartitionContext, pre, *, seed: int = 0):
     return rng.permutation(np.arange(ctx.n) % ctx.nparts), None
 
 
+def _multilevel_stage(ctx: PartitionContext, pre, **kw):
+    """METIS-style multilevel k-way V-cycle (repro.core.multilevel):
+    coarsen → partition-coarsest → prolong+refine.  Purely combinatorial —
+    the ``pre`` reorder hint is irrelevant (matching is order-free)."""
+    from repro.core.multilevel import multilevel_partition
+
+    return multilevel_partition(ctx.require_graph(), ctx.nparts,
+                                weights=ctx.weights, **kw)
+
+
 def _stage_kw(fn, post_kw: dict) -> dict:
     """Filter ``post_kw`` to the keywords ``fn``'s signature accepts
     (everything passes through a ``**kw`` catch-all)."""
@@ -255,6 +268,7 @@ def _register_builtin_stages() -> None:
     register_bisect_stage("sfc", _geometric_stage(
         lambda c, p, w, **kw: sfc_parts(c, p, w, **kw)))
     register_bisect_stage("random", _random_stage)
+    register_bisect_stage("multilevel", _multilevel_stage)
     # The refine.py/kway.py functions ARE the stages (their signatures
     # declare the keywords each consumes; refine_stage and kway_stage close
     # with a repair pass so the zero-disconnected invariant survives FM
@@ -490,6 +504,8 @@ _RSB_MESH_KW = _RSB_KW | {"laplacian"}
 _RSB_GRAPH_KW = _RSB_KW | {"use_kernel"}
 _GEOM_KW = {"rcb": set(), "rib": set(), "sfc": {"curve", "bits"},
             "random": {"seed"}}
+_ML_KW = {"coarse_factor", "coarse_solver", "refine_passes", "stall",
+          "coarse_passes", "seed", "max_levels", "min_coarsen_ratio"}
 
 _REFINE_SPECS = {
     "none": (), "repair": ("repair",), "refine": ("refine",),
@@ -536,8 +552,8 @@ def partition(
     balance_tol: float = 0.05,
     **kw,
 ) -> np.ndarray:
-    """Uniform front door: partitioner ∈ {rsb, rsb_inverse, rcb, rib, sfc,
-    random}, built as a :class:`PartitionPipeline` run.
+    """Uniform front door: partitioner ∈ {rsb, rsb_inverse, multilevel,
+    rcb, rib, sfc, random}, built as a :class:`PartitionPipeline` run.
 
     ``refine`` selects the post stages: "repair+refine" (the default for
     the RSB family — parRSB ships repaired/smoothed labels, not raw
@@ -565,6 +581,17 @@ def partition(
         pipe = PartitionPipeline(
             pre=pre or "none", bisect=_ENGINE_TO_BISECT[engine],
             post=parse_refine(refine), bisect_kw=kw, post_kw=post_kw,
+        )
+    elif partitioner == "multilevel":
+        # The V-cycle's default post chain is repair+kway: its bisect cost
+        # is so small that the deeper hill-climbing chain is free by
+        # comparison, and the V-cycle's own per-level sweeps are bounded
+        # (boundary-only, stall-capped) rather than exhaustive.
+        _check_kw(kw, _ML_KW, partitioner)
+        pipe = PartitionPipeline(
+            pre="none", bisect="multilevel",
+            post=parse_refine("repair+kway" if refine is None else refine),
+            bisect_kw=dict(balance_tol=balance_tol, **kw), post_kw=post_kw,
         )
     elif partitioner in _GEOM_KW:
         _check_kw(kw, _GEOM_KW[partitioner], partitioner)

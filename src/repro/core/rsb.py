@@ -108,6 +108,7 @@ class RSBReport:
     precond: str = "none"      # inverse-iteration preconditioner ("jacobi"/"amg")
     multilevel: bool = False   # coarse-to-fine warm starts active
     post: object = None        # refine.PostStats once pipeline post stages ran
+    ml: object = None          # multilevel.MultilevelStats (V-cycle bisect)
 
     @property
     def total_iterations(self) -> int:
@@ -133,6 +134,7 @@ class RSBReport:
             "records": [r.to_dict() for r in self.records],
             "levels": [lv.to_dict() for lv in self.levels],
             "post": self.post.to_dict() if self.post is not None else None,
+            "ml": self.ml.to_dict() if self.ml is not None else None,
         }
 
 

@@ -30,8 +30,17 @@ class Graph:
 
     @property
     def rows(self) -> np.ndarray:
-        """COO row ids aligned with `indices`."""
-        return np.repeat(np.arange(self.n, dtype=np.int64), np.diff(self.indptr))
+        """COO row ids aligned with `indices` — computed once, then cached
+        on the instance (not a dataclass field, so eq/asdict are
+        unaffected).  Hot consumers (edge_cut, FM connection tables, the
+        multilevel matching pass) call this repeatedly; the CSR arrays are
+        never mutated in place, so the cache cannot go stale."""
+        r = self.__dict__.get("_rows")
+        if r is None:
+            r = np.repeat(np.arange(self.n, dtype=np.int64),
+                          np.diff(self.indptr))
+            self.__dict__["_rows"] = r
+        return r
 
     @property
     def degrees(self) -> np.ndarray:

@@ -193,6 +193,12 @@ def expected_span_names(config: dict) -> set:
         if bisect in ("rsb-batched", "rsb-recursive"):
             names.add("solve")
             names.add("split")
+        elif bisect == "multilevel":
+            # The V-cycle emits mlevel:N per ladder level, but only
+            # mlevel:0 is guaranteed by construction (the stage runs the
+            # level-0 boundary sweep even when the input needs no ladder).
+            # "finalize" wraps the stage's closing repair + rebalance.
+            names.update({"coarsen", "coarsest", "mlevel:0", "finalize"})
     for stage in config.get("post", ()) or ():
         names.add(f"post:{stage}")
     return names

@@ -118,6 +118,15 @@ register("fragments_repaired", "counter",
 register("forced_moves", "counter",
          description="Repair moves that were balance-forced")
 
+# Multilevel k-way V-cycle (bisect="multilevel")
+register("ml_levels", "gauge", agg="max",
+         description="Coarsening-ladder depth of the multilevel V-cycle")
+register("ml_coarsen_ratio", "gauge", agg="min",
+         description="n_coarsest / n_fine of the V-cycle ladder")
+register("ml_fm_moves", "counter",
+         description="FM moves kept across coarsest polish + all V-cycle "
+                     "refinement levels")
+
 # Partition structure / distribution layer
 register("edge_cut", "gauge", agg="last",
          description="Edge cut of the partition at this point")

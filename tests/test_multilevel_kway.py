@@ -1,0 +1,263 @@
+"""Multilevel k-way V-cycle (bisect="multilevel"): heavy-edge matching
+validity, Galerkin weight conservation through the ladder, V-cycle cut /
+balance parity with the spectral engine, boundary-restricted FM
+semantics, and the stage's pipeline + observability contract."""
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import (
+    coarsen_graph,
+    edge_cut,
+    heavy_edge_matching,
+    kway_fm,
+    kway_fm_boundary,
+    multilevel_partition,
+    partition,
+    partition_metrics,
+)
+from repro.core.pipeline import PartitionPipeline
+from repro.mesh import box_mesh, dual_graph, grid_graph_2d, pebble_mesh
+from repro.mesh.graphs import build_csr
+from repro.obs.export import expected_span_names
+
+
+@pytest.fixture(scope="module")
+def pebble():
+    m = pebble_mesh(10, 10, 10, n_pebbles=4, warp=0.1, seed=2)
+    return m, dual_graph(m)
+
+
+@pytest.fixture(scope="module")
+def boxg():
+    m = box_mesh(8, 8, 6)
+    return m, dual_graph(m)
+
+
+def _edge_set(g):
+    return set(zip(g.rows.tolist(), g.indices.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# Heavy-edge matching
+# ---------------------------------------------------------------------------
+
+def test_hem_is_a_valid_matching(grid16):
+    agg, n_c = heavy_edge_matching(grid16, seed=3)
+    assert agg.shape == (grid16.n,)
+    assert n_c == int(agg.max()) + 1
+    # total coverage, aggregate sizes ≤ 2 (it is a *matching*)
+    sizes = np.bincount(agg, minlength=n_c)
+    assert sizes.min() >= 1 and sizes.max() <= 2
+    # matched pairs must be actual edges of the graph
+    edges = _edge_set(grid16)
+    for a in np.flatnonzero(sizes == 2):
+        u, v = np.flatnonzero(agg == a)
+        assert (int(u), int(v)) in edges
+    # a real matching makes progress: close to the n/2 floor on a grid
+    assert n_c <= 0.6 * grid16.n
+
+
+def test_hem_prefers_heavy_edges():
+    # path 0-1-2-3 with one dominant edge (1,2): HEM must take it
+    src = np.array([0, 1, 2])
+    dst = np.array([1, 2, 3])
+    w = np.array([1.0, 100.0, 1.0])
+    g = build_csr(src, dst, 4, weights=w)
+    agg, n_c = heavy_edge_matching(g, seed=0)
+    assert agg[1] == agg[2]
+    # nodes 0 and 3 are not adjacent and their only neighbors are taken,
+    # so they stay singletons: {0}, {1,2}, {3}
+    assert n_c == 3
+    assert agg[0] != agg[1] and agg[3] != agg[1] and agg[0] != agg[3]
+
+
+def test_hem_weight_cap_limits_aggregates(grid16):
+    w = np.ones(grid16.n)
+    cap = 1.5  # pairs would weigh 2.0 > cap: nothing may match
+    agg, n_c = heavy_edge_matching(grid16, node_weights=w, max_weight=cap,
+                                   seed=0)
+    assert n_c == grid16.n
+    np.testing.assert_array_equal(np.bincount(agg, minlength=n_c),
+                                  np.ones(grid16.n))
+
+
+# ---------------------------------------------------------------------------
+# Galerkin coarsening: weight conservation
+# ---------------------------------------------------------------------------
+
+def test_coarsen_conserves_weights_through_ladder(pebble):
+    _, g = pebble
+    rng = np.random.default_rng(7)
+    w = rng.uniform(1.0, 3.0, g.n)
+    node_total = w.sum()
+    edge_total = g.weights.sum()
+    for lvl in range(4):
+        agg, n_c = heavy_edge_matching(g, seed=lvl)
+        g_c, w_c = coarsen_graph(g, agg, n_c, node_weights=w)
+        # node weight is conserved EXACTLY (bincount is a sum)
+        assert w_c.sum() == pytest.approx(node_total, rel=1e-12)
+        assert w_c.shape == (n_c,)
+        # edge weight only shrinks (intra-aggregate edges drop out)
+        assert g_c.weights.sum() <= edge_total + 1e-9
+        # no self-loops survive Galerkin coarsening
+        assert np.all(g_c.rows != g_c.indices)
+        # exactly the intra-aggregate weight went missing
+        intra = g.weights[agg[g.rows] == agg[g.indices]].sum()
+        assert g_c.weights.sum() == pytest.approx(
+            g.weights.sum() - intra, rel=1e-9)
+        g, w, edge_total = g_c, w_c, g_c.weights.sum()
+
+
+def test_coarsen_graph_backward_compat_single_return(grid16):
+    agg, n_c = heavy_edge_matching(grid16, seed=0)
+    out = coarsen_graph(grid16, agg, n_c)
+    # without node_weights the historical Graph-only return survives
+    assert not isinstance(out, tuple)
+    assert out.n == n_c
+
+
+# ---------------------------------------------------------------------------
+# kway_fm nodes= restriction
+# ---------------------------------------------------------------------------
+
+def test_kway_fm_nodes_none_matches_all_nodes(grid16):
+    rng = np.random.default_rng(0)
+    parts = rng.integers(0, 4, grid16.n)
+    a, _ = kway_fm(grid16, parts, 4, passes=2)
+    b, _ = kway_fm(grid16, parts, 4, passes=2,
+                   nodes=np.arange(grid16.n))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_kway_fm_restricted_nodes_never_move(grid16):
+    rng = np.random.default_rng(1)
+    parts = rng.integers(0, 4, grid16.n)
+    allowed = np.arange(grid16.n // 3)
+    out, st = kway_fm(grid16, parts, 4, passes=2, nodes=allowed)
+    frozen = np.setdiff1d(np.arange(grid16.n), allowed)
+    np.testing.assert_array_equal(out[frozen], parts[frozen])
+    assert st.cut_after <= st.cut_before
+
+
+def test_kway_fm_boundary_improves_and_reports(grid16):
+    rng = np.random.default_rng(2)
+    parts = rng.integers(0, 4, grid16.n)
+    out, st = kway_fm_boundary(grid16, parts, 4, passes=3)
+    assert st.cut_after <= st.cut_before
+    assert st.cut_after == pytest.approx(edge_cut(grid16, out))
+    assert st.stages and st.stages[0] == "kway"
+
+
+# ---------------------------------------------------------------------------
+# The V-cycle
+# ---------------------------------------------------------------------------
+
+def test_multilevel_ladder_invariants(pebble):
+    m, g = pebble
+    parts, rep = multilevel_partition(g, 8, weights=m.weights, seed=0)
+    ml = rep.ml
+    assert rep.engine == "multilevel" and rep.multilevel
+    assert ml.levels >= 1 and ml.n_fine == g.n
+    assert ml.n_coarsest < g.n
+    assert 0.0 < ml.coarsen_ratio < 1.0
+    # every level strictly coarsens and the records chain n -> n_coarse
+    downs = [r for r in ml.records if r.n_coarse < r.n]
+    for prev, nxt in zip(downs, downs[1:]):
+        assert nxt.n == prev.n_coarse
+    assert set(np.unique(parts)) == set(range(8))
+    # totals: coarsest-polish moves + per-level moves, never less than the
+    # per-level sum alone
+    assert ml.fm_moves >= sum(r.fm_moves for r in ml.records)
+    assert ml.balance_moves >= sum(r.balance_moves for r in ml.records)
+
+
+def test_multilevel_cut_parity_and_balance(pebble):
+    """Acceptance shape: multilevel within 10% of spectral cut (test-size
+    tolerance), balanced to the same corridor, zero disconnected parts."""
+    m, g = pebble
+    w = m.weights
+    ml_parts = partition(m, 8, partitioner="multilevel", weights=w)
+    sp_parts = partition(m, 8, partitioner="rsb", weights=w)
+    pm_ml = partition_metrics(g, ml_parts, 8, weights=w)
+    pm_sp = partition_metrics(g, sp_parts, 8, weights=w)
+    assert pm_ml.disconnected_parts == 0
+    assert pm_ml.edge_cut <= 1.10 * pm_sp.edge_cut
+    assert pm_ml.weighted_imbalance <= 1.10
+
+
+def test_multilevel_balance_unweighted_box(boxg):
+    m, g = boxg
+    parts, rep = multilevel_partition(g, 12, seed=1)
+    counts = np.bincount(parts, minlength=12)
+    assert counts.min() >= 1
+    # unweighted: rebalance + boundary FM must land inside ~5% + 1 node
+    mean = g.n / 12
+    assert counts.max() <= 1.05 * mean + 1
+    assert counts.min() >= 0.95 * mean - 1
+    assert rep.ml.coarse_cut > 0
+
+
+def test_multilevel_degenerate_ladder_small_input(grid16):
+    # 256 nodes, 4 parts, coarse_factor=64 → target ≥ n: no ladder at all
+    parts, rep = multilevel_partition(grid16, 4, coarse_factor=64)
+    assert rep.ml.levels == 0
+    assert rep.ml.records and rep.ml.records[0].level == 0
+    assert set(np.unique(parts)) == set(range(4))
+
+
+def test_multilevel_validates_inputs(grid16):
+    with pytest.raises(ValueError, match="nparts"):
+        multilevel_partition(grid16, 0)
+    with pytest.raises(ValueError, match="coarse_solver"):
+        multilevel_partition(grid16, 4, coarse_solver="metis")
+
+
+# ---------------------------------------------------------------------------
+# Pipeline + observability contract
+# ---------------------------------------------------------------------------
+
+def test_multilevel_front_door_and_spans(pebble):
+    m, g = pebble
+    with obs.trace("partition", pre="none", bisect="multilevel") as root:
+        ctx = PartitionPipeline(pre="none", bisect="multilevel",
+                                post=("repair", "kway")).run(m, 8)
+    names = {s.name for s in root.walk()}
+    want = expected_span_names(dict(pre="none", bisect="multilevel",
+                                    post=("repair", "kway")))
+    missing = want - names - {"partition"}
+    assert not missing, f"missing spans: {missing}"
+    assert "coarsen" in names and "coarsest" in names
+    assert "mlevel:0" in names
+    pm = partition_metrics(g, ctx.parts, 8)
+    assert pm.disconnected_parts == 0
+    # the report carries the V-cycle stats for the bench tables
+    assert ctx.report.ml is not None and ctx.report.ml.levels >= 1
+    d = ctx.report.to_dict()
+    assert d["ml"]["n_fine"] == g.n
+
+
+def test_multilevel_front_door_partition(boxg):
+    m, g = boxg
+    parts = partition(m, 6, partitioner="multilevel")
+    assert set(np.unique(parts)) == set(range(6))
+    assert partition_metrics(g, parts, 6).disconnected_parts == 0
+
+
+# ---------------------------------------------------------------------------
+# Deterministic sweep of the repairability property (the randomized
+# hypothesis version lives in test_properties.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nx,ny,nparts,seed", [
+    (5, 5, 3, 0), (9, 4, 6, 1), (7, 7, 4, 2), (4, 9, 2, 3),
+])
+def test_multilevel_repaired_has_no_disconnected_parts(nx, ny, nparts, seed):
+    g = grid_graph_2d(nx, ny)
+    ctx = PartitionPipeline(
+        pre="none", bisect="multilevel", post=("repair",),
+        bisect_kw=dict(seed=seed, coarse_factor=4)).run(g, nparts)
+    pm = partition_metrics(g, ctx.parts, nparts)
+    assert pm.disconnected_parts == 0
+    assert set(np.unique(ctx.parts)) == set(range(nparts))

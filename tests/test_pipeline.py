@@ -152,19 +152,33 @@ def test_presets(box):
     m, _ = box
     assert set(PIPELINE_PRESETS) >= {"default", "raw", "quality",
                                      "geometric", "reference", "kway",
-                                     "quality-kway"}
+                                     "quality-kway", "multilevel",
+                                     "multilevel-quality"}
     raw = make_pipeline("raw")
     assert raw.post == ()
+    # "quality" flipped its post chain from greedy sweeps to repair+kway
+    # when the multilevel bisect stage landed (see configs/parrsb.py).
     q = make_pipeline("quality")
-    assert q.post_kw["sweeps"] == 8 and q.pre == "rib"
+    assert q.pre == "rib" and q.post == ("repair", "kway")
+    assert q.post_kw["passes"] == 12 and q.post_kw["balance_tol"] == 0.03
     k = make_pipeline("kway")
     assert k.post == ("repair", "kway") and k.post_kw["passes"] == 8
     qk = make_pipeline("quality-kway")
     assert qk.post == ("repair", "kway")
     assert qk.post_kw["passes"] == 12 and qk.post_kw["balance_tol"] == 0.03
-    # overrides merge
-    q2 = make_pipeline("quality", post_kw=dict(sweeps=2))
-    assert q2.post_kw["sweeps"] == 2 and q2.post_kw["balance_tol"] == 0.03
+    ml = make_pipeline("multilevel")
+    assert ml.bisect == "multilevel" and ml.pre == "none"
+    assert ml.post == ("repair", "kway")
+    assert ml.bisect_kw["coarse_factor"] == 8     # from the config layer
+    mq = make_pipeline("multilevel-quality")
+    assert mq.bisect_kw["coarse_factor"] == 16    # preset bisect_kw wins
+    assert mq.bisect_kw["stall"] == 128
+    # overrides merge; caller bisect_kw beats preset and config
+    q2 = make_pipeline("quality", post_kw=dict(passes=2))
+    assert q2.post_kw["passes"] == 2 and q2.post_kw["balance_tol"] == 0.03
+    ml2 = make_pipeline("multilevel", bisect_kw=dict(coarse_factor=4))
+    assert ml2.bisect_kw["coarse_factor"] == 4
+    assert ml2.bisect_kw["stall"] == 32
     # config fields are the base layer: default preset + knobs come from it
     from repro.configs.parrsb import ParRSBConfig
 

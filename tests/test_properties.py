@@ -13,8 +13,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import partition_metrics, rcb_order, rcb_parts, sfc_parts
 from repro.core.gather_scatter import aw_apply, gs_setup
+from repro.core.pipeline import PartitionPipeline
 from repro.core.rsb import _proportional_split
-from repro.mesh.graphs import build_csr
+from repro.mesh.graphs import build_csr, grid_graph_2d
 from repro.core.sfc import hilbert_index
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -134,3 +135,23 @@ def test_metrics_conservation(n, m, nparts, seed):
     assert internal >= -1e-9
     # total outgoing volume counts each cut edge twice (once per side)
     assert abs(pm.total_volume - 2 * pm.edge_cut) < 1e-9
+
+
+@given(
+    nx=st.integers(4, 9),
+    ny=st.integers(4, 9),
+    nparts=st.integers(2, 6),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=15, deadline=None)
+def test_multilevel_prolonged_labels_repair_to_connected(nx, ny, nparts, seed):
+    """V-cycle labels (prolonged by aggregate copy through an arbitrary
+    ladder) stay repairable: the closing repair stage always reaches zero
+    disconnected parts with every part label populated."""
+    g = grid_graph_2d(nx, ny)
+    ctx = PartitionPipeline(
+        pre="none", bisect="multilevel", post=("repair",),
+        bisect_kw=dict(seed=seed, coarse_factor=4)).run(g, nparts)
+    pm = partition_metrics(g, ctx.parts, nparts)
+    assert pm.disconnected_parts == 0
+    assert set(np.unique(ctx.parts)) == set(range(nparts))
