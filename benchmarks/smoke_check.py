@@ -47,6 +47,13 @@ not measurement noise.
 The summed wall clock counts each solve once (refined rows only when the
 refine axis is present).
 
+The fault-tolerance gate (check_chaos) rides along too: every
+repro.guard.chaos fault class — solver NaNs, empty sign-splits, CG
+divergence, stage-deadline expiry, truncated halo plans — is injected
+deterministically and must degrade into a full-coverage, connected,
+corridor-balanced partition with the degradation visible in the guard
+report AND the trace counters (silent absorption fails the gate).
+
 Observability gates (repro.obs) ride on the same invocation:
 
   * every run writes a JSONL run manifest + a Chrome/Perfetto trace for a
@@ -263,6 +270,75 @@ def check_manifest(manifest_path: str, trace_path: str) -> list:
     return problems
 
 
+def check_chaos() -> list:
+    """The fault-tolerance gate (repro.guard): every injected fault class
+    must still yield a full-coverage, connected, corridor-balanced
+    labeling, with the degradation visible in BOTH the guard report and
+    the trace counters — a fault the guard absorbs silently is as much a
+    gate failure as one it cannot absorb.  Deterministic: chaos firing is
+    a pure function of the (seed-keyed) site config."""
+    import numpy as np
+
+    from repro.core import PartitionPipeline
+    from repro.dist import plan_halo_sharding, verify_halo_plan
+    from repro.guard import chaos
+    from repro.guard.policy import count_disconnected
+    from repro.mesh import pebble_mesh
+
+    failures = []
+    mesh = pebble_mesh(8, 8, 8, n_pebbles=3, seed=0)
+    nparts = 8
+    solver_sites = ["solver_nan", "empty_split", "cg_divergence", "deadline"]
+    for site in solver_sites:
+        # cg_divergence lives in the inverse-iteration outer loop; the
+        # other sites corrupt any solver's result at the guard boundary.
+        bkw = {"method": "inverse"} if site == "cg_divergence" else {}
+        ctx = PartitionPipeline(
+            pre="rcb", bisect="rsb-batched", post=("repair", "refine"),
+            bisect_kw=bkw, guard=True, guard_kw={"chaos": (site,)},
+        ).run(mesh, nparts)
+        parts = ctx.parts
+        graph = ctx.require_graph()
+        tag = f"chaos[{site}]"
+        if sorted(np.unique(parts)) != list(range(nparts)):
+            failures.append(f"{tag}: labels do not cover 0..{nparts - 1}")
+        if count_disconnected(graph, parts, nparts) != 0:
+            failures.append(f"{tag}: disconnected parts in output")
+        # The corridor is weighted — pebble elements carry 1..2x weights.
+        w = np.asarray(mesh.weights, np.float64)
+        pw = np.bincount(parts, weights=w, minlength=nparts)
+        mean = w.sum() / nparts
+        if pw.max() > 1.10 * mean:
+            failures.append(
+                f"{tag}: weighted imbalance {pw.max() / mean:.3f} > 1.10")
+        gr = ctx.report.guard
+        if gr is None or gr.fallbacks <= 0:
+            failures.append(f"{tag}: guard report shows no fallbacks — "
+                            "the fault was not exercised")
+        elif ctx.trace is not None:
+            traced = ctx.trace.total_counters().get("guard_fallbacks", 0)
+            if int(traced) != int(gr.fallbacks):
+                failures.append(
+                    f"{tag}: trace counter guard_fallbacks={traced:.0f} "
+                    f"!= report {gr.fallbacks}")
+        if site == "deadline" and (gr is None or not gr.deadline_expired):
+            failures.append(f"{tag}: deadline never marked expired")
+    # halo_truncate: the plan self-check must catch the dropped export
+    # rows and rebuild a plan identical to the clean one.
+    ctx = PartitionPipeline(pre="rcb", bisect="rsb-batched",
+                            post=("repair", "refine"), guard=True).run(
+                                mesh, nparts)
+    clean = plan_halo_sharding(ctx.require_graph(), ctx.parts, nparts)
+    with chaos.overlay(("halo_truncate",)):
+        rebuilt = plan_halo_sharding(ctx.require_graph(), ctx.parts, nparts)
+    if verify_halo_plan(rebuilt):
+        failures.append("chaos[halo_truncate]: rebuilt plan still invalid")
+    if not np.array_equal(rebuilt.export_mask, clean.export_mask):
+        failures.append("chaos[halo_truncate]: rebuilt plan differs from "
+                        "the clean plan")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_partition.json")
@@ -320,6 +396,12 @@ def main() -> int:
     # every stage span the recorded config implies.
     for msg in check_manifest(args.manifest, args.trace):
         print(f"OBS-GATE {msg}", file=sys.stderr)
+        failed = True
+
+    # Fault-tolerance gate: every chaos fault class must degrade into a
+    # valid partition with the degradation visible in report + counters.
+    for msg in check_chaos():
+        print(f"CHAOS-GATE {msg}", file=sys.stderr)
         failed = True
 
     base_wall = sum(r["seconds"] for r in _wall_rows(base_rows))

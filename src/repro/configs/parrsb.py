@@ -36,6 +36,11 @@ class ParRSBConfig:
     coarse_factor: int = 8
     ml_refine_passes: int = 2
     ml_stall: int = 32
+    # Fault-tolerance guard (repro.guard): validation front door, solver
+    # escalation ladder, output-invariant finalizer.  None defers to
+    # REPRO_GUARD (default on); a healthy guarded run is bit-identical to
+    # guard-off, so presets stay comparable across the switch.
+    guard: bool | None = None
 
 
 def make_config() -> ParRSBConfig:
@@ -131,5 +136,6 @@ def make_pipeline(preset: str | None = None, *,
                          stall=cfg.ml_stall, balance_tol=cfg.balance_tol)
     bisect_kw.update(spec.pop("bisect_kw", {}))
     bisect_kw.update(overrides.pop("bisect_kw", {}))
+    spec.setdefault("guard", cfg.guard)
     spec.update(overrides)
     return PartitionPipeline(post_kw=post_kw, bisect_kw=bisect_kw, **spec)

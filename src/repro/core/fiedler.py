@@ -60,6 +60,7 @@ class FiedlerResult:
     iterations: int        # restarts (lanczos) or outer iters (inverse)
     method: str
     levels: int = 0        # multilevel warm-start hierarchy depth (0 = none)
+    breakdown: bool = False  # solver hit a non-finite iterate; stale (λ, res)
 
 
 def _emit_fiedler_metrics(results) -> None:
@@ -351,6 +352,7 @@ def fiedler_from_graph(
             )
         iters = info.restarts
         lam, res = info.eigenvalue, info.residual
+        broke = info.breakdown
     elif method == "inverse":
         pre = amg_setup(graph, order=order)
         ml_levels = max(ml_levels, len(pre.ops))
@@ -368,11 +370,12 @@ def fiedler_from_graph(
             )
         iters = info.outer_iters
         lam, res = info.eigenvalue, info.residual
+        broke = info.breakdown
         obs.counter_add("cg_inner_iters", float(np.sum(info.inner_iters)))
     else:
         raise ValueError(f"unknown fiedler method: {method}")
     out = FiedlerResult(np.asarray(y[:n]), lam, res, iters, method,
-                        levels=ml_levels)
+                        levels=ml_levels, breakdown=broke)
     _emit_fiedler_metrics([out])
     return out
 
@@ -432,6 +435,7 @@ def fiedler_from_mesh(
                 window=window, max_restarts=max_restarts, tol=tol,
             )
         iters, lam, res = info.restarts, info.eigenvalue, info.residual
+        broke = info.breakdown
     elif method == "inverse":
         if graph_for_amg is None:
             raise ValueError("inverse iteration needs the assembled dual graph for AMG")
@@ -449,11 +453,12 @@ def fiedler_from_mesh(
                 key=jax.random.PRNGKey(seed), b0=b0, tol=tol,
             )
         iters, lam, res = info.outer_iters, info.eigenvalue, info.residual
+        broke = info.breakdown
         obs.counter_add("cg_inner_iters", float(np.sum(info.inner_iters)))
     else:
         raise ValueError(f"unknown fiedler method: {method}")
     out = FiedlerResult(np.asarray(y[:E]), lam, res, iters, method,
-                        levels=ml_levels)
+                        levels=ml_levels, breakdown=broke)
     _emit_fiedler_metrics([out])
     return out
 
@@ -634,6 +639,8 @@ def _solve_inverse_buckets(results, solve_ix, size_of, bucket_key, build_op,
                 Yh[r, : size_of(i)], float(info.eigenvalue[r]),
                 float(info.residual[r]), int(info.outer_iters[r]), "inverse",
                 levels=pre_levels,
+                breakdown=bool(info.breakdown[r])
+                if info.breakdown is not None else False,
             )
 
 
@@ -649,6 +656,8 @@ def _solve_packed_lanczos(op, offs, N, n_seg, seg, mask, b0, sizes,
         FiedlerResult(
             Yh[int(offs[b]):int(offs[b]) + s], float(info.eigenvalue[b]),
             float(info.residual[b]), int(info.restarts[b]), "lanczos",
+            breakdown=bool(info.breakdown[b])
+            if info.breakdown is not None else False,
         )
         for b, s in enumerate(sizes)
     ]

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flexcg import CGResult, _project_out_ones, flexcg
+from repro.guard import chaos
 
 
 @dataclasses.dataclass
@@ -46,6 +47,7 @@ class InverseIterInfo:
     inner_iters: list
     eigenvalue: float
     residual: float
+    breakdown: bool = False    # hit a non-finite iterate; λ/res are stale
 
 
 @dataclasses.dataclass
@@ -55,6 +57,7 @@ class BatchedInverseIterInfo:
     eigenvalue: np.ndarray     # (B,)
     residual: np.ndarray       # (B,)
     converged: np.ndarray      # (B,) bool
+    breakdown: np.ndarray | None = None  # (B,) bool: λ/res are stale
 
 
 def _rayleigh(op, y, mask):
@@ -104,6 +107,7 @@ def inverse_iteration(
     lam = jnp.asarray(0.0)
     res = jnp.asarray(jnp.inf)
     outer = 0
+    breakdown = False
     for outer in range(1, max_outer + 1):
         # Augmented projection: x0 = Y (Yᵀ L Y)⁻¹ Yᵀ b.
         if ys:
@@ -128,8 +132,12 @@ def inverse_iteration(
         b = _project_out_ones(y / ynorm, mask)
         b = b / jnp.maximum(jnp.linalg.norm(b), 1e-30)
         lam, res = _rayleigh(opj, b, mask)
+        if chaos.should_fire("cg_divergence", outer):
+            lam = jnp.asarray(jnp.nan)
         if not (np.isfinite(float(lam)) and np.isfinite(float(res))):
-            # Numerical breakdown: keep the last good iterate and stop.
+            # Numerical breakdown: keep the last good iterate and stop,
+            # flagging the stale Rayleigh pair for the caller.
+            breakdown = True
             b = b_prev
             lam, res = _rayleigh(opj, b, mask)
             break
@@ -151,6 +159,7 @@ def inverse_iteration(
         inner_iters=inner_counts,
         eigenvalue=float(lam),
         residual=float(res),
+        breakdown=breakdown,
     )
     return b, info
 
@@ -253,6 +262,7 @@ def inverse_iteration_batched(
     lam = np.zeros(B)
     res = np.full(B, np.inf)
     done = np.zeros(B, dtype=bool)
+    breakdown = np.zeros(B, dtype=bool)
     outer_iters = np.zeros(B, dtype=np.int64)
     lb = _apply_op(op, b)  # L@b, kept in lockstep with b's freeze updates
     for outer in range(1, max_outer + 1):
@@ -268,6 +278,8 @@ def inverse_iteration_batched(
         iters_h = np.asarray(iters)
         inner_counts.append(iters_h)
         lam_h, res_h = np.asarray(lam_new), np.asarray(res_new)
+        if chaos.should_fire("cg_divergence", outer):
+            lam_h = np.full_like(lam_h, np.nan)
         finite = np.isfinite(lam_h) & np.isfinite(res_h)
         upd = ~done & finite  # a non-finite update keeps the last good state
         outer_iters[upd] = outer
@@ -284,7 +296,10 @@ def inverse_iteration_batched(
             lys.pop(0)
 
         done |= res <= tol * np.maximum(lam, 1e-12)
-        done |= ~finite  # numerical breakdown: stop on the last good iterate
+        # Numerical breakdown: stop on the last good iterate, but flag the
+        # problem — the frozen λ/res never met tolerance and are stale.
+        breakdown |= ~finite & ~done
+        done |= ~finite
         # Paper's stopping signal, per subproblem: a single-iteration inner
         # solve means the Krylov space is invariant → eigenvector reached.
         if outer > 1:
@@ -298,5 +313,6 @@ def inverse_iteration_batched(
         eigenvalue=lam,
         residual=res,
         converged=done,
+        breakdown=breakdown,
     )
     return b, info

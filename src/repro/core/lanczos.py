@@ -45,6 +45,7 @@ class LanczosInfo:
     eigenvalue: float
     residual: float
     converged: bool
+    breakdown: bool = False  # non-finite Ritz pair: (θ, res) are unusable
 
 
 @dataclasses.dataclass
@@ -55,6 +56,7 @@ class BatchedLanczosInfo:
     eigenvalue: np.ndarray   # (B,)
     residual: np.ndarray     # (B,)
     converged: np.ndarray    # (B,) bool
+    breakdown: np.ndarray | None = None  # (B,) bool: frozen on a stale pair
 
 
 def _window_body(op, q0, mask, m):
@@ -168,6 +170,8 @@ def lanczos_fiedler(
         eigenvalue=float(theta),
         residual=float(res),
         converged=converged,
+        breakdown=not (np.isfinite(float(theta))
+                       and np.isfinite(float(res))),
     )
     return y, info
 
@@ -287,22 +291,30 @@ def lanczos_fiedler_batched(
     theta = np.zeros(n_seg)
     res = np.full(n_seg, np.inf)
     done = np.zeros(n_seg, dtype=bool)
+    breakdown = np.zeros(n_seg, dtype=bool)
     restarts = np.zeros(n_seg, dtype=np.int64)
     for r in range(1, max_restarts + 1):
         y_new, theta_new, res_new, q_next = _packed_restart(
             op, q, mask, seg, n_seg, window
         )
-        upd = ~done
+        theta_h, res_h = np.asarray(theta_new), np.asarray(res_new)
+        finite = np.isfinite(theta_h) & np.isfinite(res_h)
+        upd = ~done & finite  # a non-finite restart keeps the last state
         restarts[upd] = r
-        theta = np.where(upd, np.asarray(theta_new), theta)
-        res = np.where(upd, np.asarray(res_new), res)
+        theta = np.where(upd, theta_h, theta)
+        res = np.where(upd, res_h, res)
         y = np.where(upd[seg_h], np.asarray(y_new), y)
         done |= res <= tol * np.maximum(theta, 1e-12)
+        # Numerical breakdown: freeze the problem and flag it — its frozen
+        # (θ, res) never met tolerance.
+        breakdown |= ~finite & ~done
+        done |= ~finite
         if done.all():
             break
         q = q_next
 
     info = BatchedLanczosInfo(
-        restarts=restarts, eigenvalue=theta, residual=res, converged=done
+        restarts=restarts, eigenvalue=theta, residual=res, converged=done,
+        breakdown=breakdown,
     )
     return y, info

@@ -52,6 +52,7 @@ driver": see ``register_post_stage`` and the README's stage contract.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import inspect
 import os
@@ -63,6 +64,12 @@ from repro.core.kway import kway_stage
 from repro.core.refine import (PostStats, balance_corridor, refine_stage,
                                repair_components)
 from repro.core.rsb import RSBReport, rsb_partition_graph, rsb_partition_mesh
+from repro.guard import chaos
+from repro.guard.errors import GuardReport
+from repro.guard.policy import GuardPolicy, check_output, enforce_output
+from repro.guard.validate import (component_labels, pack_components,
+                                  proportional_budgets, validate_graph,
+                                  validate_mesh, validate_nparts)
 from repro.mesh.graphs import Graph, dual_graph_from_incidence
 
 
@@ -314,6 +321,46 @@ def _permuted_input(ctx: PartitionContext, order: np.ndarray):
     )
 
 
+def _subset_context(ctx: PartitionContext, idx: np.ndarray,
+                    nparts: int) -> PartitionContext:
+    """A sub-context over the nodes in ``idx`` (one connected component),
+    renumbered contiguously — what the per-component bisect runs on."""
+    if ctx.mesh is not None:
+        mesh = ctx.mesh.take(idx)
+        return PartitionContext(nparts=nparts, mesh=mesh,
+                                coords=mesh.coords, weights=mesh.weights)
+    return PartitionContext(
+        nparts=nparts, graph=ctx.require_graph().sub(idx),
+        coords=None if ctx.coords is None else ctx.coords[idx],
+        weights=None if ctx.weights is None else ctx.weights[idx],
+    )
+
+
+def _guard_enabled(flag: bool | None) -> bool:
+    """Resolve the pipeline guard switch: an explicit ``guard=`` wins;
+    otherwise ``REPRO_GUARD`` (default on; off/0/false/no disable)."""
+    if flag is not None:
+        return bool(flag)
+    env = os.environ.get("REPRO_GUARD", "on").strip().lower()
+    return env not in ("off", "0", "false", "no")
+
+
+def _merge_guard(dst: GuardReport, src) -> None:
+    """Fold one bisect stage's GuardReport into the pipeline-wide one
+    (the RSB drivers create their own per-stage report)."""
+    if src is None or src is dst:
+        return
+    dst.validated |= src.validated
+    dst.sanitized |= src.sanitized
+    dst.issues.extend(src.issues)
+    dst.components = max(dst.components, src.components)
+    dst.retries += src.retries
+    dst.fallbacks += src.fallbacks
+    dst.sanitize_fixes += src.sanitize_fixes
+    dst.deadline_expired |= src.deadline_expired
+    dst.degraded.extend(src.degraded)
+
+
 def run_post_stages(
     graph: Graph,
     parts: np.ndarray,
@@ -385,6 +432,17 @@ class PartitionPipeline:
     post stage, filtered against each stage's signature (the built-ins
     share the ``balance_tol`` surface; ``sweeps`` is declared — and hence
     received — by "refine" only).
+
+    ``guard`` switches the fault-tolerance envelope (:mod:`repro.guard`):
+    validation front door before ``pre``, per-component dispatch for
+    disconnected inputs, a :class:`~repro.guard.policy.SolverGuard` around
+    every spectral solve, and the output-invariant finalizer after
+    ``post``.  ``None`` defers to ``REPRO_GUARD`` (default on).
+    ``guard_kw`` parameterizes the :class:`~repro.guard.policy.GuardPolicy`
+    (``sanitize``, ``max_retries``, ``switch_method``, ``deadline``,
+    ``balance_tol``) plus the chaos overlay (``chaos`` — fault-site tuple —
+    ``chaos_seed``, ``chaos_rate``).  A healthy guarded run returns labels
+    bit-identical to ``guard=False``: the guard only *mutates* on failure.
     """
 
     pre: str = "rcb"
@@ -392,6 +450,8 @@ class PartitionPipeline:
     post: tuple = ("repair", "refine")
     bisect_kw: dict = dataclasses.field(default_factory=dict)
     post_kw: dict = dataclasses.field(default_factory=dict)
+    guard: bool | None = None
+    guard_kw: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if self.pre not in PRE_STAGES:
@@ -419,14 +479,19 @@ class PartitionPipeline:
         """
         ctx = _make_context(obj, nparts, coords, weights)
         spectral = self.bisect.startswith("rsb")
+        guard_on = _guard_enabled(self.guard)
         ctx.config = {"pre": self.pre, "bisect": self.bisect,
-                      "post": list(self.post), "nparts": nparts, "n": ctx.n}
+                      "post": list(self.post), "nparts": nparts, "n": ctx.n,
+                      "guard": guard_on}
 
         root = obs.trace("partition", nparts=nparts, n=ctx.n,
                          pre=self.pre, bisect=self.bisect,
-                         post=",".join(self.post))
+                         post=",".join(self.post), guard=guard_on)
         with root:
-            self._run_stages(ctx, nparts, spectral)
+            if guard_on:
+                self._run_guarded(ctx, nparts, spectral)
+            else:
+                self._run_stages(ctx, nparts, spectral)
         if isinstance(root, obs.Span):
             ctx.trace = root
             out_dir = os.environ.get("REPRO_OBS_DIR")
@@ -434,8 +499,173 @@ class PartitionPipeline:
                 ctx.export_manifest(runs_dir=out_dir)
         return ctx
 
+    # -- the guarded path: validate → (components?) → stages → finalize --
+
+    def _run_guarded(self, ctx: PartitionContext, nparts: int,
+                     spectral: bool) -> None:
+        policy = GuardPolicy.from_kw(self.guard_kw)
+        greport = GuardReport()
+        sites = tuple(self.guard_kw.get("chaos") or ())
+        overlay = (chaos.overlay(
+            sites, seed=int(self.guard_kw.get("chaos_seed", 0)),
+            rate=float(self.guard_kw.get("chaos_rate", 1.0)))
+            if sites else contextlib.nullcontext())
+        with overlay:
+            ncomp, comp = self._validate_input(ctx, nparts, policy, greport)
+            if ncomp > 1:
+                self._run_components(ctx, nparts, spectral, policy,
+                                     greport, comp, ncomp)
+            else:
+                self._run_stages(ctx, nparts, spectral, policy=policy,
+                                 greport=greport)
+            self._finalize(ctx, nparts, policy, greport, ncomp)
+
+    def _validate_input(self, ctx: PartitionContext, nparts: int,
+                        policy: GuardPolicy, greport: GuardReport):
+        """``guard:validate`` — the implicit first stage: typed
+        :class:`GuardError` in strict mode, recorded repairs in sanitize
+        mode, plus component detection (disconnected inputs are handled
+        downstream, never rejected here)."""
+        with obs.timed("guard:validate") as t:
+            validate_nparts(nparts, ctx.n)
+            if ctx.mesh is not None:
+                mesh = ctx.mesh
+                if (ctx.coords is not mesh.coords
+                        or ctx.weights is not mesh.weights):
+                    mesh = dataclasses.replace(
+                        mesh, coords=np.asarray(ctx.coords, np.float64),
+                        weights=np.asarray(ctx.weights, np.float64))
+                mesh = validate_mesh(mesh, nparts=nparts,
+                                     sanitize=policy.sanitize,
+                                     report=greport)
+                ctx.mesh = mesh
+                ctx.coords, ctx.weights = mesh.coords, mesh.weights
+            else:
+                g, c, w = validate_graph(
+                    ctx.graph, coords=ctx.coords, weights=ctx.weights,
+                    nparts=nparts, sanitize=policy.sanitize, report=greport)
+                ctx.graph, ctx.coords, ctx.weights = g, c, w
+            comp, ncomp = component_labels(ctx.require_graph())
+            greport.components = max(greport.components, ncomp)
+            if greport.sanitize_fixes:
+                obs.counter_add("guard_sanitize_fixes",
+                                greport.sanitize_fixes)
+        ctx.config["components"] = ncomp
+        ctx.stages.append(StageRecord(
+            kind="guard", name="validate", seconds=t.seconds,
+            info={"issues": len(greport.issues),
+                  "fixes": greport.sanitize_fixes,
+                  "components": ncomp},
+        ))
+        return ncomp, comp
+
+    def _run_components(self, ctx: PartitionContext, nparts: int,
+                        spectral: bool, policy: GuardPolicy,
+                        greport: GuardReport, comp: np.ndarray,
+                        ncomp: int) -> None:
+        """Partition a disconnected input component by component.
+
+        ``ncomp <= nparts``: largest-remainder part budgets per component,
+        each component run through pre+bisect with its own budget; the
+        post chain then runs ONCE over the full graph (no edge crosses
+        components, so refinement can never merge them back).
+        ``ncomp > nparts``: whole components are packed onto parts
+        (greedy heaviest-first) — no bisection can improve on that without
+        splitting a component across parts it shares no edge with.
+        """
+        w = np.ones(ctx.n) if ctx.weights is None else \
+            np.asarray(ctx.weights, np.float64)
+        comp_w = np.bincount(comp, weights=w, minlength=ncomp)
+        with obs.timed(f"pre:{self.pre}") as t_pre:
+            pass        # pre runs inside each component's sub-pipeline
+        ctx.stages.append(StageRecord(
+            kind="pre", name=self.pre, seconds=t_pre.seconds,
+            info={"mode": "per-component", "components": ncomp}))
+
+        parts = np.zeros(ctx.n, dtype=np.int64)
+        merged = RSBReport(records=[], seconds=0.0, engine="-", pre=self.pre)
+        with obs.timed(f"bisect:{self.bisect}") as t_bisect:
+            if ncomp > nparts:
+                parts = pack_components(comp_w, nparts)[comp]
+                merged.engine = "pack-components"
+                greport.degrade(f"input:packed-{ncomp}-components")
+            else:
+                budgets = proportional_budgets(comp_w, nparts)
+                offset = 0
+                for c in range(ncomp):
+                    idx = np.flatnonzero(comp == c)
+                    k = int(budgets[c])
+                    if k <= 1 or idx.size <= 1:
+                        parts[idx] = offset
+                    else:
+                        sub = _subset_context(ctx, idx, k)
+                        self._run_stages(sub, k, spectral, policy=policy,
+                                         greport=greport, with_post=False)
+                        parts[idx] = offset + np.asarray(sub.parts,
+                                                         np.int64)
+                        for s in sub.stages:
+                            s.info["component"] = c
+                        ctx.stages.extend(sub.stages)
+                        merged.records.extend(sub.report.records)
+                        merged.engine = sub.report.engine
+                    offset += k
+        merged.seconds = t_bisect.seconds
+        ctx.parts = parts
+        ctx.parts_raw = parts.copy()
+        ctx.report = merged
+        ctx.stages.append(StageRecord(
+            kind="bisect", name=self.bisect, seconds=t_bisect.seconds,
+            info={"mode": ("pack" if ncomp > nparts else "per-component"),
+                  "components": ncomp,
+                  "iterations": merged.total_iterations}))
+
+        if self.post:
+            parts, agg, records = run_post_stages(
+                ctx.require_graph(), ctx.parts, nparts, self.post,
+                weights=ctx.weights, post_kw=self.post_kw)
+            ctx.parts = parts
+            ctx.stages.extend(records)
+            merged.post = agg
+
+    def _finalize(self, ctx: PartitionContext, nparts: int,
+                  policy: GuardPolicy, greport: GuardReport,
+                  ncomp: int) -> None:
+        """``guard:finalize`` — the output-invariant closer.  Checks every
+        run; *mutates* only when labels are structurally invalid or a
+        degraded solve path left problems behind, so a healthy guarded run
+        returns bit-identical labels to ``guard=False``."""
+        with obs.timed("guard:finalize") as t:
+            graph = ctx.require_graph()
+            expected = max(0, ncomp - nparts)
+            problems = check_output(
+                graph, ctx.parts, nparts, weights=ctx.weights,
+                balance_tol=policy.balance_tol,
+                expected_disconnected=expected)
+            structural = any(p.startswith("labels") for p in problems)
+            degraded = bool(greport.fallbacks or greport.deadline_expired)
+            enforced = False
+            if structural or (problems and degraded):
+                ctx.parts = enforce_output(
+                    graph, ctx.parts, nparts, weights=ctx.weights,
+                    balance_tol=policy.balance_tol, report=greport)
+                enforced = True
+                problems = check_output(
+                    graph, ctx.parts, nparts, weights=ctx.weights,
+                    balance_tol=policy.balance_tol,
+                    expected_disconnected=expected)
+        ctx.stages.append(StageRecord(
+            kind="guard", name="finalize", seconds=t.seconds,
+            info={"problems": list(problems), "enforced": enforced,
+                  "retries": greport.retries,
+                  "fallbacks": greport.fallbacks},
+        ))
+        if ctx.report is not None:
+            ctx.report.guard = greport
+
     def _run_stages(self, ctx: PartitionContext, nparts: int,
-                    spectral: bool) -> None:
+                    spectral: bool, *, policy: GuardPolicy | None = None,
+                    greport: GuardReport | None = None,
+                    with_post: bool = True) -> None:
         # --- pre: reorder hint (rcb/rib) or one-shot permutation (sfc)
         with obs.timed(f"pre:{self.pre}") as t_pre:
             hint, order = None, None
@@ -455,9 +685,11 @@ class PartitionPipeline:
         ))
 
         # --- bisect
+        bkw = dict(self.bisect_kw)
+        if policy is not None and spectral:
+            bkw.setdefault("guard", policy)
         with obs.timed(f"bisect:{self.bisect}") as t_bisect:
-            parts, report = _BISECT_STAGES[self.bisect](run_ctx, hint,
-                                                        **self.bisect_kw)
+            parts, report = _BISECT_STAGES[self.bisect](run_ctx, hint, **bkw)
         dt = t_bisect.seconds
         if order is not None:   # map labels back to the caller's order
             unperm = np.empty_like(parts)
@@ -471,6 +703,8 @@ class PartitionPipeline:
         if report is None:
             report = RSBReport(records=[], seconds=dt, engine="-",
                                pre=self.pre)
+        if greport is not None:
+            _merge_guard(greport, report.guard)
         ctx.parts = np.asarray(parts, dtype=np.int64)
         ctx.parts_raw = ctx.parts.copy()
         ctx.report = report
@@ -481,7 +715,7 @@ class PartitionPipeline:
 
         # --- post (one corridor per chain, fixed from the bisection's
         # part weights — see run_post_stages)
-        if self.post:
+        if self.post and with_post:
             parts, agg, records = run_post_stages(
                 ctx.require_graph(), ctx.parts, nparts, self.post,
                 weights=ctx.weights, post_kw=self.post_kw)
@@ -550,6 +784,8 @@ def partition(
     refine: str | tuple | None = None,
     refine_sweeps: int = 4,
     balance_tol: float = 0.05,
+    guard: bool | None = None,
+    guard_kw: dict | None = None,
     **kw,
 ) -> np.ndarray:
     """Uniform front door: partitioner ∈ {rsb, rsb_inverse, multilevel,
@@ -565,11 +801,15 @@ def partition(
 
     ``engine`` selects the RSB driver ("batched"/"recursive"); remaining
     keywords are routed to the selected stage and unknown keys raise.
+    ``guard``/``guard_kw`` switch and parameterize the fault-tolerance
+    envelope (validation, solver escalation, output finalizer — see
+    :class:`PartitionPipeline`); the default defers to ``REPRO_GUARD``.
     Use :meth:`PartitionPipeline.run` directly to get the full context
     (report with post section, per-stage timings) instead of labels only.
     """
     is_mesh = hasattr(obj, "vert_gid")
     post_kw = dict(sweeps=refine_sweeps, balance_tol=balance_tol)
+    gkw = dict(guard=guard, guard_kw=dict(guard_kw or {}))
 
     if partitioner in ("rsb", "rsb_lanczos", "rsb_inverse"):
         if engine not in _ENGINE_TO_BISECT:
@@ -580,7 +820,7 @@ def partition(
         pre = kw.pop("pre", "rcb")
         pipe = PartitionPipeline(
             pre=pre or "none", bisect=_ENGINE_TO_BISECT[engine],
-            post=parse_refine(refine), bisect_kw=kw, post_kw=post_kw,
+            post=parse_refine(refine), bisect_kw=kw, post_kw=post_kw, **gkw,
         )
     elif partitioner == "multilevel":
         # The V-cycle's default post chain is repair+kway: its bisect cost
@@ -592,13 +832,14 @@ def partition(
             pre="none", bisect="multilevel",
             post=parse_refine("repair+kway" if refine is None else refine),
             bisect_kw=dict(balance_tol=balance_tol, **kw), post_kw=post_kw,
+            **gkw,
         )
     elif partitioner in _GEOM_KW:
         _check_kw(kw, _GEOM_KW[partitioner], partitioner)
         pipe = PartitionPipeline(
             pre="none", bisect=partitioner,
             post=parse_refine("none" if refine is None else refine),
-            bisect_kw=kw, post_kw=post_kw,
+            bisect_kw=kw, post_kw=post_kw, **gkw,
         )
     else:
         raise ValueError(f"unknown partitioner: {partitioner}")

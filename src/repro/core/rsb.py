@@ -59,6 +59,7 @@ from repro.core.fiedler import (
     next_pow2,
 )
 from repro.core.rcb import rcb_order, rib_order
+from repro.guard.policy import SolverGuard
 from repro.mesh.graphs import Graph, dual_graph_from_incidence, extract_subgraphs
 
 _ENGINES = ("batched", "recursive")
@@ -76,6 +77,7 @@ class BisectionRecord:
     seconds: float
     levels: int = 0    # multilevel hierarchy depth (warm start or AMG); 0 = none
     split_seconds: float = 0.0   # this node's sort/split + child extraction
+    breakdown: bool = False      # solver breakdown (or guard fallback) here
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -109,6 +111,7 @@ class RSBReport:
     multilevel: bool = False   # coarse-to-fine warm starts active
     post: object = None        # refine.PostStats once pipeline post stages ran
     ml: object = None          # multilevel.MultilevelStats (V-cycle bisect)
+    guard: object = None       # guard.GuardReport: what degraded and why
 
     @property
     def total_iterations(self) -> int:
@@ -135,16 +138,34 @@ class RSBReport:
             "levels": [lv.to_dict() for lv in self.levels],
             "post": self.post.to_dict() if self.post is not None else None,
             "ml": self.ml.to_dict() if self.ml is not None else None,
+            "guard": self.guard.to_dict() if self.guard is not None else None,
         }
 
 
-def _node_seed(seed: int, level: int, p_lo: int) -> int:
+def _node_seed(seed: int, level: int, p_lo: int, attempt: int = 0) -> int:
     """Deterministic per-node seed.  `seed + level` alone would hand every
     sibling at a level the identical Lanczos start vector; mixing in p_lo
     (the node's part range origin — unique per node within a level)
-    decorrelates them."""
-    h = (seed * 0x9E3779B1 + level * 0x85EBCA77 + p_lo * 0xC2B2AE3D) & 0x7FFFFFFF
+    decorrelates them.  `attempt` decorrelates guard retries: every retry
+    (and its warm-start noise blend) draws a fresh start vector instead of
+    replaying the identical failing solve; attempt=0 leaves the seed
+    bit-identical to the pre-guard hash."""
+    h = (seed * 0x9E3779B1 + level * 0x85EBCA77 + p_lo * 0xC2B2AE3D
+         + attempt * 0x27D4EB2F) & 0x7FFFFFFF
     return int(h)
+
+
+def _guarded(sg: SolverGuard | None, res, solve_fn, *, level: int,
+             p_lo: int, size: int, coords_sub=None):
+    """Admit one solve through the guard (no-op when unguarded).
+    ``res`` may be None when the primary solve raised."""
+    if sg is None:
+        return res
+    res2, why = sg.admit(res, level=level, p_lo=p_lo, size=size)
+    if why is None:
+        return res2
+    return sg.rescue(solve_fn, why, level=level, p_lo=p_lo, size=size,
+                     coords=coords_sub)
 
 
 def _warm_vector(c: np.ndarray) -> np.ndarray:
@@ -237,6 +258,7 @@ def rsb_partition_mesh(
     multilevel: bool = True,
     fine_restarts: int | None = 3,
     precond: str = "jacobi",
+    guard=None,
 ) -> tuple[np.ndarray, RSBReport]:
     """Partition a HexMesh into `nparts` via RSB on its dual graph.
 
@@ -278,7 +300,7 @@ def rsb_partition_mesh(
     )
     kw = dict(method=method, pre=pre, tol=tol, window=window,
               max_restarts=max_restarts, seed=seed, warm_start=warm_start,
-              multilevel=multilevel, precond=precond)
+              multilevel=multilevel, precond=precond, guard=guard)
     if engine == "batched":
         return _rsb_mesh_batched(mesh, nparts, **kw)
     return _rsb_mesh_recursive(mesh, nparts, **kw)
@@ -286,10 +308,12 @@ def rsb_partition_mesh(
 
 def _rsb_mesh_recursive(
     mesh, nparts, *, method, pre, tol, window, max_restarts, seed, warm_start,
-    multilevel, precond,
+    multilevel, precond, guard=None,
 ) -> tuple[np.ndarray, RSBReport]:
     records: list[BisectionRecord] = []
     parts = np.zeros(mesh.nelems, dtype=np.int64)
+    sg = (SolverGuard(guard, seed=seed, method=method)
+          if guard is not None and guard.enabled else None)
 
     def rec(idx: np.ndarray, p_lo: int, p_hi: int, level: int) -> None:
         np_here = p_hi - p_lo
@@ -302,21 +326,38 @@ def _rsb_mesh_recursive(
             idx = idx[fn(mesh.coords[idx], mesh.weights[idx])]
 
         sub_vg = mesh.vert_gid[idx]
-        graph_amg = None
-        order_amg = None
-        if method == "inverse":
-            uniq, inv = np.unique(sub_vg, return_inverse=True)
-            graph_amg = dual_graph_from_incidence(
-                inv.reshape(sub_vg.shape), uniq.size, idx.size
-            )
-            order_amg = np.arange(idx.size)  # already RCB-ordered above
         warm = _warm_vector(mesh.coords[idx]) if warm_start else None
-        with obs.timed("solve", level=level, n=int(idx.size)) as t_solve:
-            res = fiedler_from_mesh(
-                sub_vg, method=method, graph_for_amg=graph_amg, order=order_amg,
-                seed=_node_seed(seed, level, p_lo), tol=tol, window=window,
+        amg_cache: dict = {}
+
+        def solve_fn(m, s, _sub_vg=sub_vg, _size=int(idx.size)):
+            graph_amg = order_amg = None
+            if m == "inverse":
+                if "g" not in amg_cache:
+                    uniq, inv = np.unique(_sub_vg, return_inverse=True)
+                    amg_cache["g"] = dual_graph_from_incidence(
+                        inv.reshape(_sub_vg.shape), uniq.size, _size
+                    )
+                graph_amg = amg_cache["g"]
+                order_amg = np.arange(_size)  # already RCB-ordered above
+            return fiedler_from_mesh(
+                _sub_vg, method=m, graph_for_amg=graph_amg, order=order_amg,
+                seed=s, tol=tol, window=window,
                 max_restarts=max_restarts, warm=warm, multilevel=multilevel,
             )
+
+        with obs.timed("solve", level=level, n=int(idx.size)) as t_solve:
+            if sg is None:
+                res = solve_fn(method, _node_seed(seed, level, p_lo))
+            else:
+                res = None
+                if not sg.expired():  # past the stage deadline: skip straight
+                    try:              # to the fallback rung inside rescue
+                        res = solve_fn(method, _node_seed(seed, level, p_lo))
+                    except Exception:
+                        res = None
+                res = _guarded(sg, res, solve_fn, level=level, p_lo=p_lo,
+                               size=int(idx.size),
+                               coords_sub=mesh.coords[idx])
         n_left = np_here // 2
         with obs.timed("split", level=level) as t_split:
             lo, hi = _proportional_split(
@@ -326,7 +367,7 @@ def _rsb_mesh_recursive(
             level=level, size=int(idx.size), nparts=np_here, method=res.method,
             iterations=res.iterations, eigenvalue=res.eigenvalue,
             residual=res.residual, seconds=t_solve.seconds, levels=res.levels,
-            split_seconds=t_split.seconds,
+            split_seconds=t_split.seconds, breakdown=res.breakdown,
         ))
         rec(idx_lo, p_lo, p_lo + n_left, level + 1)
         rec(idx_hi, p_lo + n_left, p_hi, level + 1)
@@ -337,13 +378,13 @@ def _rsb_mesh_recursive(
         records=records, seconds=t_total.seconds,
         levels=_levels_from_records(records), engine="recursive",
         pre=pre or "none", precond="amg" if method == "inverse" else "none",
-        multilevel=multilevel,
+        multilevel=multilevel, guard=sg.report if sg is not None else None,
     )
 
 
 def _rsb_mesh_batched(
     mesh, nparts, *, method, pre, tol, window, max_restarts, seed, warm_start,
-    multilevel, precond,
+    multilevel, precond, guard=None,
 ) -> tuple[np.ndarray, RSBReport]:
     """Level-synchronous mesh driver: delegate to the graph engine on the
     assembled dual graph.
@@ -363,6 +404,7 @@ def _rsb_mesh_batched(
         method=method, pre=pre, tol=tol, window=window,
         max_restarts=max_restarts, seed=seed, warm_start=warm_start,
         use_kernel=False, multilevel=multilevel, precond=precond,
+        guard=guard,
     )
 
 
@@ -388,6 +430,7 @@ def rsb_partition_graph(
     multilevel: bool = True,
     fine_restarts: int | None = 3,
     precond: str = "jacobi",
+    guard=None,
 ) -> tuple[np.ndarray, RSBReport]:
     """Partition a generic graph (assembled ELL Laplacian) via RSB.
 
@@ -422,7 +465,7 @@ def rsb_partition_graph(
     kw = dict(coords=coords, weights=weights, method=method, pre=pre, tol=tol,
               window=window, max_restarts=max_restarts, seed=seed,
               warm_start=warm_start, use_kernel=use_kernel,
-              multilevel=multilevel, precond=precond)
+              multilevel=multilevel, precond=precond, guard=guard)
     if engine == "batched":
         return _rsb_graph_batched(graph, nparts, **kw)
     return _rsb_graph_recursive(graph, nparts, **kw)
@@ -430,12 +473,14 @@ def rsb_partition_graph(
 
 def _rsb_graph_recursive(
     graph, nparts, *, coords, weights, method, pre, tol, window, max_restarts,
-    seed, warm_start, use_kernel, multilevel, precond,
+    seed, warm_start, use_kernel, multilevel, precond, guard=None,
 ) -> tuple[np.ndarray, RSBReport]:
     n = graph.n
     w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
     records: list[BisectionRecord] = []
     parts = np.zeros(n, dtype=np.int64)
+    sg = (SolverGuard(guard, seed=seed, method=method)
+          if guard is not None and guard.enabled else None)
 
     def rec(g: Graph, idx: np.ndarray, p_lo: int, p_hi: int, level: int) -> None:
         np_here = p_hi - p_lo
@@ -450,12 +495,28 @@ def _rsb_graph_recursive(
         warm = None
         if warm_start and coords is not None:
             warm = _warm_vector(coords[idx])
-        with obs.timed("solve", level=level, n=int(idx.size)) as t_solve:
-            res = fiedler_from_graph(
-                g, method=method, order=None, seed=_node_seed(seed, level, p_lo),
+
+        def solve_fn(m, s, _g=g):
+            return fiedler_from_graph(
+                _g, method=m, order=None, seed=s,
                 warm=warm, tol=tol, window=window, max_restarts=max_restarts,
                 use_kernel=use_kernel, multilevel=multilevel,
             )
+
+        with obs.timed("solve", level=level, n=int(idx.size)) as t_solve:
+            if sg is None:
+                res = solve_fn(method, _node_seed(seed, level, p_lo))
+            else:
+                res = None
+                if not sg.expired():  # past the stage deadline: skip straight
+                    try:              # to the fallback rung inside rescue
+                        res = solve_fn(method, _node_seed(seed, level, p_lo))
+                    except Exception:
+                        res = None
+                res = _guarded(
+                    sg, res, solve_fn, level=level, p_lo=p_lo,
+                    size=int(idx.size),
+                    coords_sub=coords[idx] if coords is not None else None)
         n_left = np_here // 2
         with obs.timed("split", level=level) as t_split:
             lo, hi = _proportional_split(res.vector, w[idx], n_left, np_here)
@@ -465,7 +526,7 @@ def _rsb_graph_recursive(
             level=level, size=int(idx.size), nparts=np_here, method=res.method,
             iterations=res.iterations, eigenvalue=res.eigenvalue,
             residual=res.residual, seconds=t_solve.seconds, levels=res.levels,
-            split_seconds=t_split.seconds,
+            split_seconds=t_split.seconds, breakdown=res.breakdown,
         ))
         rec(g_lo, idx_lo, p_lo, p_lo + n_left, level + 1)
         rec(g_hi, idx_hi, p_lo + n_left, p_hi, level + 1)
@@ -476,19 +537,21 @@ def _rsb_graph_recursive(
         records=records, seconds=t_total.seconds,
         levels=_levels_from_records(records), engine="recursive",
         pre=pre or "none", precond="amg" if method == "inverse" else "none",
-        multilevel=multilevel,
+        multilevel=multilevel, guard=sg.report if sg is not None else None,
     )
 
 
 def _rsb_graph_batched(
     graph, nparts, *, coords, weights, method, pre, tol, window, max_restarts,
-    seed, warm_start, use_kernel, multilevel, precond,
+    seed, warm_start, use_kernel, multilevel, precond, guard=None,
 ) -> tuple[np.ndarray, RSBReport]:
     n = graph.n
     w = np.ones(n) if weights is None else np.asarray(weights, np.float64)
     records: list[BisectionRecord] = []
     levels: list[LevelRecord] = []
     parts = np.zeros(n, dtype=np.int64)
+    sg = (SolverGuard(guard, seed=seed, method=method)
+          if guard is not None and guard.enabled else None)
     with obs.timed("engine", engine="batched") as t_total:
         # Run-wide shape-bucket pins (see _rsb_mesh_batched): subgraph degrees
         # never exceed the root's, so the root ELL width bounds every level.
@@ -516,21 +579,44 @@ def _rsb_graph_batched(
 
             with obs.span(f"level:{level}", nodes=len(solve_nodes)):
                 with obs.timed("solve", level=level) as t_solve:
-                    results = fiedler_from_graph_batched(
-                        [g for g, _, _, _ in solve_nodes],
-                        method=method,
-                        seeds=[_node_seed(seed, level, p_lo)
-                               for _, _, p_lo, _ in solve_nodes],
-                        warms=[
-                            _warm_vector(coords[idx])
-                            if warm_start and coords is not None else None
-                            for _, idx, _, _ in solve_nodes
-                        ],
-                        tol=tol, window=window, max_restarts=max_restarts,
-                        pack_slots=pack_slots, pack_segs=pack_segs,
-                        width_pad=width_pad, use_kernel=use_kernel,
-                        multilevel=multilevel, precond=precond,
-                    )
+                    if sg is not None and sg.expired():
+                        # Past the stage deadline: skip the level solve and
+                        # let every node take the fallback rung below.
+                        results = [None] * len(solve_nodes)
+                    else:
+                        results = fiedler_from_graph_batched(
+                            [g for g, _, _, _ in solve_nodes],
+                            method=method,
+                            seeds=[_node_seed(seed, level, p_lo)
+                                   for _, _, p_lo, _ in solve_nodes],
+                            warms=[
+                                _warm_vector(coords[idx])
+                                if warm_start and coords is not None else None
+                                for _, idx, _, _ in solve_nodes
+                            ],
+                            tol=tol, window=window, max_restarts=max_restarts,
+                            pack_slots=pack_slots, pack_segs=pack_segs,
+                            width_pad=width_pad, use_kernel=use_kernel,
+                            multilevel=multilevel, precond=precond,
+                        )
+                if sg is not None:
+                    # Re-admit every node's result; failed ones re-solve
+                    # individually through the escalation ladder.
+                    rescued = []
+                    for (g, idx, p_lo, p_hi), res in zip(solve_nodes,
+                                                         results):
+                        def solve_fn(m, s, _g=g):
+                            return fiedler_from_graph(
+                                _g, method=m, order=None, seed=s, tol=tol,
+                                window=window, max_restarts=max_restarts,
+                                use_kernel=use_kernel, multilevel=multilevel,
+                            )
+                        rescued.append(_guarded(
+                            sg, res, solve_fn, level=level, p_lo=p_lo,
+                            size=int(idx.size),
+                            coords_sub=coords[idx]
+                            if coords is not None else None))
+                    results = rescued
                 with obs.timed("split", level=level) as t_split:
                     next_active = []
                     for (g, idx, p_lo, p_hi), res in zip(solve_nodes, results):
@@ -540,7 +626,7 @@ def _rsb_graph_batched(
                             method=res.method, iterations=res.iterations,
                             eigenvalue=res.eigenvalue, residual=res.residual,
                             seconds=t_solve.seconds / len(solve_nodes),
-                            levels=res.levels,
+                            levels=res.levels, breakdown=res.breakdown,
                         ))
                         n_left = np_here // 2
                         lo, hi = _proportional_split(
@@ -571,7 +657,7 @@ def _rsb_graph_batched(
         records=records, seconds=t_total.seconds,
         levels=levels, engine="batched", pre=pre or "none",
         precond=precond if method == "inverse" else "none",
-        multilevel=multilevel,
+        multilevel=multilevel, guard=sg.report if sg is not None else None,
     )
 
 

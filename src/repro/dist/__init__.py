@@ -19,6 +19,7 @@ from repro.dist.partition_aware import (
     halo_exchange,
     plan_halo_sharding,
     scatter_features,
+    verify_halo_plan,
 )
 from repro.dist.sharding import (
     MeshRules,
@@ -46,4 +47,5 @@ __all__ = [
     "recsys_rules",
     "ring_allreduce",
     "scatter_features",
+    "verify_halo_plan",
 ]

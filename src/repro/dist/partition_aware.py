@@ -44,6 +44,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import obs
+from repro.guard import chaos
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # identity eq/hash: ndarray
@@ -121,6 +122,38 @@ def plan_halo_sharding(graph, parts, nparts: int | None = None,
     if pad_to < 1:
         raise ValueError(f"pad_to must be >= 1, got {pad_to}")
 
+    plan = _assemble_plan(graph, parts, nparts, pad_to)
+    if chaos.should_fire("halo_truncate", n, nparts):
+        plan = _truncate_exports(plan)
+
+    # Always-on cheap self-check (O(nnz), no graph re-walk): a plan whose
+    # remote edge sources are not all exported would silently read zeros in
+    # every sweep.  A corrupt plan is rebuilt once with fault injection
+    # muted — the repair path must not be re-corrupted.
+    problems = verify_halo_plan(plan)
+    if problems:
+        with chaos.suppressed():
+            plan = _assemble_plan(graph, parts, nparts, pad_to)
+        obs.counter_add("guard_fallbacks", 1)
+        rest = verify_halo_plan(plan)
+        if rest:
+            raise ValueError(f"halo plan invalid after rebuild: {rest}")
+
+    # Wire volume of the plan — what the partition's edge cut costs the
+    # runtime, per sweep per feature column (float32 ⇒ 4 bytes/word).
+    words = plan.collective_words_per_feature
+    obs.counter_add("halo_words", float(words))
+    obs.counter_add("halo_bytes", 4.0 * words)
+    obs.gauge_max("halo_max_degree", int(plan.halo))
+    return plan
+
+
+def _assemble_plan(graph, parts: np.ndarray, nparts: int,
+                   pad_to: int) -> HaloPlan:
+    """The O(nnz log nnz) host-side plan assembly (no validation, no
+    telemetry — :func:`plan_halo_sharding` wraps it)."""
+    n = graph.n
+
     def pad(k: int) -> int:
         return int(-(-k // pad_to) * pad_to)
 
@@ -179,20 +212,55 @@ def plan_halo_sharding(graph, parts, nparts: int | None = None,
         edge_weight[pr_s, gpos] = w_s
         edge_mask[pr_s, gpos] = 1.0
 
-    plan = HaloPlan(
+    return HaloPlan(
         n=n, n_shards=nparts, n_local=n_local, halo=halo, max_edges=max_edges,
         block_sizes=counts, shard_of=parts, slot_of=slot_of,
         export_idx=export_idx, export_mask=export_mask,
         edge_src=edge_src, edge_dst=edge_dst,
         edge_weight=edge_weight, edge_mask=edge_mask,
     )
-    # Wire volume of the plan — what the partition's edge cut costs the
-    # runtime, per sweep per feature column (float32 ⇒ 4 bytes/word).
-    words = plan.collective_words_per_feature
-    obs.counter_add("halo_words", float(words))
-    obs.counter_add("halo_bytes", 4.0 * words)
-    obs.gauge_max("halo_max_degree", int(halo))
-    return plan
+
+
+def _truncate_exports(plan: HaloPlan) -> HaloPlan:
+    """``halo_truncate`` chaos: drop the last real export row of every
+    shard — the classic truncated-exchange bug a rank mismatch produces."""
+    mask = plan.export_mask.copy()
+    for s in range(plan.n_shards):
+        real = np.flatnonzero(mask[s] > 0)
+        if real.size:
+            mask[s, real[-1]] = 0.0
+    return dataclasses.replace(plan, export_mask=mask)
+
+
+def verify_halo_plan(plan: HaloPlan) -> list:
+    """Cheap structural audit of a plan (empty list == valid): every real
+    remote edge source must point at an in-range, mask-1 export row, and
+    the shard blocks must cover exactly ``n`` nodes."""
+    problems: list = []
+    if int(plan.block_sizes.sum()) != plan.n:
+        problems.append(
+            f"block sizes sum to {int(plan.block_sizes.sum())}, "
+            f"expected {plan.n}")
+    src = plan.edge_src[plan.edge_mask > 0]
+    remote = src >= plan.n_local
+    if remote.any():
+        if plan.halo <= 0:
+            problems.append("remote edge sources but halo == 0")
+        else:
+            rj = src[remote] - plan.n_local
+            r, j = rj // plan.halo, rj % plan.halo
+            bad_r = (r < 0) | (r >= plan.n_shards)
+            if bad_r.any():
+                problems.append(
+                    f"{int(bad_r.sum())} remote sources index "
+                    "a shard out of range")
+            missing = int((plan.export_mask[r[~bad_r], j[~bad_r]]
+                           < 1.0).sum())
+            if missing:
+                problems.append(
+                    f"{missing} remote edge sources point at "
+                    "unexported (masked-out) rows")
+    return problems
 
 
 # ---------------------------------------------------------------------------

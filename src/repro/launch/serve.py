@@ -8,6 +8,7 @@ prefill/decode_step functions the dry-run lowers at production shape.
 from __future__ import annotations
 
 import argparse
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -15,17 +16,35 @@ import numpy as np
 
 from repro import obs
 from repro.configs import get_arch
+from repro.guard import GuardError, check_positive_int
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--steps", type=int, default=32)
+    # sizes stay untyped here: the guard's front door turns a bad value
+    # into a diagnostic instead of argparse's bare "invalid int value"
+    ap.add_argument("--batch", default=4)
+    ap.add_argument("--prompt-len", default=16)
+    ap.add_argument("--steps", default=32)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
+
+    try:
+        args.batch = check_positive_int("batch", args.batch)
+        args.prompt_len = check_positive_int("prompt-len", args.prompt_len)
+        args.steps = check_positive_int("steps", args.steps, minimum=2)
+        if not (np.isfinite(args.temperature) and args.temperature >= 0):
+            raise GuardError(
+                "bad-argument",
+                f"temperature must be a finite float >= 0, "
+                f"got {args.temperature!r}",
+                details={"name": "temperature",
+                         "value": args.temperature})
+    except GuardError as err:
+        print(err.diagnostic(), file=sys.stderr)
+        sys.exit(2)
 
     arch = get_arch(args.arch)
     assert arch.family == "lm", "serve launcher is for LM archs"

@@ -184,16 +184,23 @@ def expected_span_names(config: dict) -> set:
     pipeline config — the CI drift guard's contract.  Derived from the
     same fields ``PartitionPipeline.run`` stamps into the manifest."""
     names = {"partition"}
+    if config.get("guard"):
+        names.add("guard:validate")
+        names.add("guard:finalize")
     pre = config.get("pre")
     if pre and pre != "none":
         names.add(f"pre:{pre}")
     bisect = config.get("bisect")
+    # Per-component dispatch (disconnected input, components != 1) may hand
+    # every component a budget of one part — then no spectral solve runs,
+    # so only single-component runs guarantee the inner solver spans.
+    single_comp = config.get("components", 1) == 1
     if bisect:
         names.add(f"bisect:{bisect}")
-        if bisect in ("rsb-batched", "rsb-recursive"):
+        if bisect in ("rsb-batched", "rsb-recursive") and single_comp:
             names.add("solve")
             names.add("split")
-        elif bisect == "multilevel":
+        elif bisect == "multilevel" and single_comp:
             # The V-cycle emits mlevel:N per ladder level, but only
             # mlevel:0 is guaranteed by construction (the stage runs the
             # level-0 boundary sweep even when the input needs no ladder).

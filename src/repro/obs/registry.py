@@ -136,3 +136,17 @@ register("halo_bytes", "counter", unit="bytes",
          description="Halo exchange bytes per feature at f32")
 register("halo_max_degree", "gauge", agg="max",
          description="Max neighbor count over shards in the halo plan")
+
+# Fault-tolerance guard (repro.guard)
+register("guard_retries", "counter",
+         description="Seed-perturbed Fiedler re-solves after a failed "
+                     "health check")
+register("guard_fallbacks", "counter",
+         description="Guard escalations past retry: method switches, "
+                     "geometric/index fallback vectors, finalize repairs, "
+                     "halo plan rebuilds")
+register("guard_sanitize_fixes", "counter",
+         description="Input defects repaired by sanitize-mode validation")
+register("guard_deadline_expired", "counter",
+         description="Bisect stages whose guard deadline expired "
+                     "(remaining solves go straight to fallback)")

@@ -62,12 +62,16 @@ def test_default_pipeline_refines(box, default_ctx):
 def test_stage_records(default_ctx):
     ctx = default_ctx
     kinds = [(s.kind, s.name) for s in ctx.stages]
-    assert kinds == [("pre", "rcb"), ("bisect", "rsb-batched"),
-                     ("post", "repair"), ("post", "refine")]
+    # the guard brackets every run: validation front door, then the
+    # pre/bisect/post chain, then the output-invariant finalizer
+    assert kinds == [("guard", "validate"),
+                     ("pre", "rcb"), ("bisect", "rsb-batched"),
+                     ("post", "repair"), ("post", "refine"),
+                     ("guard", "finalize")]
     assert all(s.seconds >= 0 for s in ctx.stages)
     assert ctx.seconds == pytest.approx(ctx.stage_seconds())
     stats = ctx.stats()
-    assert stats["nparts"] == 8 and len(stats["stages"]) == 4
+    assert stats["nparts"] == 8 and len(stats["stages"]) == 6
     assert "post" in stats
 
 
@@ -208,7 +212,8 @@ def test_pre_sfc_permutation_mode(box):
     the caller's element order."""
     m, g = box
     ctx = PartitionPipeline(pre="sfc", post=()).run(m, 4)
-    assert ctx.stages[0].info["mode"] == "permute"
+    pre_rec = next(s for s in ctx.stages if s.kind == "pre")
+    assert pre_rec.info["mode"] == "permute"
     # the permuted run's dual graph is relabeled back for reuse and must
     # equal the caller-order dual graph exactly
     assert ctx.graph is not None
