@@ -14,6 +14,17 @@ from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.segment_sum.ops import connection_table
+
+
+def _segment_sum_numpy(labels, cols, wts, nparts):
+    """Host-baseline table build (np.add.at scatter) — what the sharded
+    refinement sweep replaces; the smoke gate asserts the op beats it."""
+    B, w = cols.shape
+    out = np.zeros((B, nparts), np.float32)
+    ri = np.broadcast_to(np.arange(B)[:, None], (B, w))
+    np.add.at(out, (ri, labels[cols]), wts)
+    return out
 
 
 def run(full: bool = False) -> None:
@@ -38,6 +49,26 @@ def run(full: bool = False) -> None:
     emit("kernels/embedding_bag_pallas_interpret",
          time_fn(lambda t, i, s: embedding_bag(t, i, s, B), table, idx, seg),
          f"V={V};d={d};nnz={nnz}")
+
+    B, w, m, nparts = (16384, 27, 32768, 128) if full else (4096, 27, 8192, 64)
+    labels_n = rng.integers(0, nparts, m)
+    cols_n = rng.integers(0, m, (B, w))
+    wts_n = rng.integers(1, 5, (B, w)).astype(np.float32)
+    emit("kernels/segment_sum_numpy",
+         time_fn(lambda: _segment_sum_numpy(labels_n, cols_n, wts_n, nparts)),
+         f"B={B};w={w};nparts={nparts}")
+    labels = jnp.asarray(labels_n, jnp.int32)
+    cols = jnp.asarray(cols_n, jnp.int32)
+    wts = jnp.asarray(wts_n)
+    emit("kernels/segment_sum_op",
+         time_fn(lambda l, c, v: connection_table(l, c, v, nparts),
+                 labels, cols, wts),
+         f"B={B};w={w};nparts={nparts}")
+    emit("kernels/segment_sum_pallas_interpret",
+         time_fn(lambda l, c, v: connection_table(l, c, v, nparts,
+                                                  prefer="pallas"),
+                 labels, cols, wts),
+         f"B={B};w={w};nparts={nparts}")
 
     Bq, S, H, D = (2, 512, 8, 64) if full else (1, 256, 4, 64)
     q = jnp.asarray(rng.normal(size=(Bq, S, H, D)), jnp.float32)

@@ -164,6 +164,66 @@ def run(
     return rows
 
 
+def run_sharded(dims=(10, 10, 10), nparts: int = 8) -> list:
+    """Host-vs-sharded refinement head-to-head from the SAME bisection
+    labels (no second eigensolve): the ``repair+refine`` host chain
+    against ``repair+refine-sharded`` (device-resident sweeps, one
+    boundary-label all_gather per sweep — dist/refine_sharded).
+
+    Rows land in BENCH_partition.json under ``partition_sharded``; the CI
+    gate (benchmarks.smoke_check.check_dist_refine) asserts the sharded
+    cut stays within 1% of the host refined cut and that the trace
+    counters certify exactly one collective per sweep
+    (``sharded_gathers == sharded_sweeps``)."""
+    from repro import obs
+
+    mesh = pebble_mesh(*dims, n_pebbles=6, seed=0)
+    graph = dual_graph(mesh)
+    pipe = PartitionPipeline(pre="rcb", bisect="rsb-batched",
+                             bisect_kw=dict(tol=1e-3), post=())
+    ctx = pipe.run(mesh, nparts)
+    rows = []
+    # Sharded sweeps apply one conflict-free independent set per collective
+    # (sweep 0 only primes proposals), so reaching host-FM quality takes
+    # more sweeps than the host path takes passes — 8 is where the pebble
+    # mesh converges past the greedy host cut.
+    for refine, post, kw in (
+            ("repair+refine", ("repair", "refine"), {}),
+            ("repair+refine-sharded", ("repair", "refine-sharded"),
+             {"sweeps": 8}),
+            ("kway-sharded", ("kway-sharded",), {"sweeps": 8})):
+        with obs.trace(f"bench:sharded/{refine}") as root:
+            t0 = time.perf_counter()
+            parts, _, _ = run_post_stages(
+                ctx.require_graph(), ctx.parts_raw, nparts, post,
+                weights=ctx.weights, post_kw=dict(kw))
+            dt = time.perf_counter() - t0
+        counters: dict = {}
+        for s in root.walk():
+            for k, v in s.counters.items():
+                counters[k] = counters.get(k, 0.0) + v
+        pm = partition_metrics(graph, parts, nparts, weights=mesh.weights)
+        rows.append({
+            "name": f"sharded/{refine}", "refine": refine,
+            "n": mesh.nelems, "nparts": nparts,
+            "seconds": dt, "cut": pm.edge_cut,
+            "w_imb": pm.weighted_imbalance,
+            "disconnected": pm.disconnected_parts,
+            "sweeps": counters.get("sharded_sweeps", 0),
+            "gathers": counters.get("sharded_gathers", 0),
+            "moves": counters.get("sharded_moves", 0),
+            "halo_words": counters.get("halo_words", 0),
+            "halo_bytes": counters.get("halo_bytes", 0),
+        })
+        emit(f"partition_sharded/{refine}", dt * 1e6,
+             f"E={mesh.nelems};P={nparts};cut={pm.edge_cut:.0f};"
+             f"sweeps={counters.get('sharded_sweeps', 0):.0f};"
+             f"gathers={counters.get('sharded_gathers', 0):.0f};"
+             f"halo_words={counters.get('halo_words', 0):.0f};"
+             f"disc={pm.disconnected_parts}")
+    return rows
+
+
 def run_large(side: int = 32, nparts: int = 32) -> list:
     """Large-mesh engine head-to-head (the multilevel headline claim): a
     ``side``³ box mesh — ~10x the default suite's element count — split by

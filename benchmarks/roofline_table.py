@@ -22,7 +22,33 @@ def load_records(dirname: str = "runs/dryrun") -> list:
     return recs
 
 
+def segment_sum_row(B: int = 16384, w: int = 27, nparts: int = 128,
+                    m: int = 32768, *, hbm_gbps: float = 1200.0,
+                    flops_tf: float = 90.0) -> dict:
+    """Analytical roofline row for the segment-sum connection-table kernel
+    (dist/refine_sharded's per-sweep launch).  Memory: stream cols+wts
+    (B·w int32+f32), resident labels (m int32), write the (B, nparts) f32
+    table.  Compute: w fused compare+multiply+add sweeps over (B, nparts).
+    The table's arithmetic intensity ~ w·nparts / (8·w + 4·nparts) flops
+    per byte — memory-bound at mesh-typical w, which is why one batched
+    launch per sweep (not one per shard) is the right shape."""
+    bytes_moved = B * w * 8 + m * 4 + B * nparts * 4
+    flops = 3 * B * w * nparts          # cmp + mul + add per (row, slot, q)
+    mem_s = bytes_moved / (hbm_gbps * 1e9)
+    comp_s = flops / (flops_tf * 1e12)
+    dominant = "memory" if mem_s >= comp_s else "compute"
+    emit(
+        f"roofline/kernel/segment_sum/B{B}w{w}p{nparts}",
+        max(mem_s, comp_s) * 1e6,
+        f"compute={comp_s:.3e}s;memory={mem_s:.3e}s;collective=0.000e+00s;"
+        f"dominant={dominant};"
+        f"intensity={flops / bytes_moved:.2f}flop/B",
+    )
+    return {"bytes": bytes_moved, "flops": flops, "dominant": dominant}
+
+
 def run(dirname: str = "runs/dryrun") -> list:
+    segment_sum_row()
     recs = load_records(dirname)
     if not recs:
         print("# no dry-run records found; run `python -m repro.launch.dryrun --all`")

@@ -165,6 +165,7 @@ def main() -> None:
     partition_rows: list = []
     smoke_rows: list = []
     large_rows: list = []
+    sharded_rows: list = []
     if want("quality"):
         from benchmarks import quality
 
@@ -183,6 +184,10 @@ def main() -> None:
             # smoke_check gates these recorded rows instead of re-running
             # the ~10x mesh on every push.
             large_rows = partition_time.run_large()
+            # Device-resident sharded refinement vs the host chain from
+            # the same bisection — check_dist_refine gates cut parity and
+            # the one-collective-per-sweep contract on these rows.
+            sharded_rows = partition_time.run_sharded()
     if want("weak_scaling"):
         from benchmarks import weak_scaling
 
@@ -211,6 +216,7 @@ def main() -> None:
             "partition_time": partition_rows,
             "partition_time_smoke": smoke_rows,
             "partition_large": large_rows,
+            "partition_sharded": sharded_rows,
             "engine_speedup": _engine_speedup(quality_rows, partition_rows),
         }
         with open(args.json, "w") as f:

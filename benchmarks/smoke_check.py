@@ -81,6 +81,7 @@ WALL_TOLERANCE = 1.25  # total: fail if summed seconds > 125% of baseline
 POST_FRACTION = 0.15   # greedy post wall clock ≤ 15% of the summed total
 KWAY_POST_FRACTION = 0.25  # summed kway post ≤ 25% of summed kway row wall
 STAGE_SHARE_TOLERANCE = 0.15  # per-stage share of wall may grow ≤ 15 points
+DIST_CUT_TOL = 1.01    # sharded refined cut must stay within 1% of host
 MULTILEVEL_CUT_TOL = 1.05  # multilevel cut ≤ 105% of the spectral cut
 MULTILEVEL_WALL_FRACTION = 0.5  # large row: ml wall ≤ half spectral wall
 
@@ -270,6 +271,62 @@ def check_manifest(manifest_path: str, trace_path: str) -> list:
     return problems
 
 
+def check_dist_refine(base_sharded) -> list:
+    """Device-resident sharded refinement contract (dist/refine_sharded):
+
+    * BENCH_partition.json must carry recorded ``partition_sharded`` rows
+      (host chain + both sharded chains) — a baseline refresh that drops
+      the table disables this gate silently otherwise;
+    * live re-run: the sharded refined cut stays within DIST_CUT_TOL of
+      the host ``repair+refine`` cut from the SAME bisection labels, with
+      zero disconnected parts;
+    * one-collective-per-sweep: the trace counters on every sharded row
+      (recorded AND live) must certify exactly one boundary-label
+      all_gather per sweep (``sharded_gathers == sharded_sweeps > 0``)
+      with non-zero halo traffic and ``halo_bytes == 4 * halo_words``.
+    """
+    failures = []
+    need = {"sharded/repair+refine", "sharded/repair+refine-sharded",
+            "sharded/kway-sharded"}
+    have = {r.get("name") for r in base_sharded}
+    if not need <= have:
+        failures.append(
+            f"partition_sharded baseline rows missing {sorted(need - have)}"
+            " (regenerate with benchmarks.run --json)")
+    rows = partition_time.run_sharded()
+
+    def contract(r, tag):
+        out = []
+        sweeps, gathers = r.get("sweeps", 0), r.get("gathers", 0)
+        if not sweeps or gathers != sweeps:
+            out.append(f"{tag}: gathers {gathers:.0f} != sweeps "
+                       f"{sweeps:.0f} — the one-collective-per-sweep "
+                       "contract is broken")
+        if not r.get("halo_words"):
+            out.append(f"{tag}: no halo traffic counted")
+        elif r.get("halo_bytes") != 4 * r["halo_words"]:
+            out.append(f"{tag}: halo_bytes {r.get('halo_bytes', 0):.0f} != "
+                       f"4x halo_words {r['halo_words']:.0f}")
+        return out
+
+    for src, rs in (("baseline", base_sharded), ("live", rows)):
+        by = {r.get("name"): r for r in rs}
+        host = by.get("sharded/repair+refine")
+        for name in ("sharded/repair+refine-sharded", "sharded/kway-sharded"):
+            r = by.get(name)
+            if r is None or host is None:
+                continue  # missing rows already reported above
+            failures.extend(contract(r, f"{src} {name}"))
+            if r["cut"] > DIST_CUT_TOL * host["cut"]:
+                failures.append(
+                    f"{src} {name}: cut {r['cut']:.0f} > "
+                    f"{DIST_CUT_TOL:.2f}x host refined {host['cut']:.0f}")
+            if src == "live" and r.get("disconnected", 0) != 0:
+                failures.append(f"{src} {name}: {r['disconnected']} "
+                                "disconnected part(s)")
+    return failures
+
+
 def check_chaos() -> list:
     """The fault-tolerance gate (repro.guard): every injected fault class
     must still yield a full-coverage, connected, corridor-balanced
@@ -396,6 +453,13 @@ def main() -> int:
     # every stage span the recorded config implies.
     for msg in check_manifest(args.manifest, args.trace):
         print(f"OBS-GATE {msg}", file=sys.stderr)
+        failed = True
+
+    # Sharded-refinement gate: cut parity with the host chain and the
+    # one-all_gather-per-sweep collective contract, on both the recorded
+    # partition_sharded baseline and a live re-run.
+    for msg in check_dist_refine(baseline.get("partition_sharded", [])):
+        print(f"DIST-GATE {msg}", file=sys.stderr)
         failed = True
 
     # Fault-tolerance gate: every chaos fault class must degrade into a

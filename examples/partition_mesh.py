@@ -2,14 +2,36 @@
 partitioners compared (RSB / RCB / RIB / SFC / random).
 
     PYTHONPATH=src python examples/partition_mesh.py \
-        [--dims NX NY NZ] [--pebbles K] [--nparts P] [--seed S]
+        [--dims NX NY NZ] [--pebbles K] [--nparts P] [--seed S] \
+        [--devices N]
 
 Bad sizes go through the guard's validation front door and come back as a
 typed diagnostic (exit 2), not a traceback.
+
+``--devices N`` (N > 1) adds the device-resident sharded refinement row
+(``rsb_sharded``, dist/refine_sharded) and prints its span tree — one
+``sweep:k`` span per collective round with the halo_words/halo_bytes
+exchange cost on each.  The default (1 device) keeps the host refinement
+path and skips the demo.
 """
 
 import argparse
+import os
 import sys
+
+# The forced host-device count must reach XLA before jax is (transitively)
+# imported below, so peek at --devices ahead of the real argparse run.
+_pre = argparse.ArgumentParser(add_help=False)
+_pre.add_argument("--devices", default=1)
+try:
+    _ndev = int(_pre.parse_known_args()[0].devices)
+except (ValueError, TypeError):
+    _ndev = 1
+if _ndev > 1 and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_ndev}").strip()
 
 import numpy as np
 
@@ -29,6 +51,9 @@ def main(argv=None) -> int:
     ap.add_argument("--pebbles", default=5)
     ap.add_argument("--nparts", default=16)
     ap.add_argument("--seed", default=1)
+    ap.add_argument("--devices", default=1,
+                    help="emulated device count for the sharded-refinement "
+                         "demo (default 1 = host path only)")
     args = ap.parse_args(argv)
 
     try:
@@ -36,6 +61,7 @@ def main(argv=None) -> int:
                       zip(("nx", "ny", "nz"), args.dims))
         n_pebbles = check_positive_int("pebbles", args.pebbles, minimum=0)
         seed = check_positive_int("seed", args.seed, minimum=0)
+        devices = check_positive_int("devices", args.devices)
         mesh = pebble_mesh(nx, ny, nz, n_pebbles=n_pebbles, warp=0.15,
                            seed=seed)
         nparts = check_positive_int("nparts", args.nparts)
@@ -61,6 +87,17 @@ def main(argv=None) -> int:
                                        weights=ctx.weights)
     rows = [("rsb", ctx.parts), ("rsb_kway", parts_kway),
             ("rsb_raw", ctx.parts_raw)]
+    sharded_root = None
+    if devices > 1:
+        # Device-resident sweeps over the same bisection labels: shards
+        # exchange ONE fused boundary-label all_gather per sweep; the
+        # span tree below prices each round (halo_words/halo_bytes).
+        with obs.trace("rsb_sharded") as sharded_root:
+            parts_sharded, _, _ = run_post_stages(
+                graph, ctx.parts_raw, nparts,
+                ("repair", "refine-sharded"), weights=ctx.weights,
+                post_kw=dict(sweeps=8))
+        rows.insert(1, ("rsb_sharded", parts_sharded))
     rows += [(name, partition(mesh, nparts, partitioner=name))
              for name in ("rcb", "rib", "sfc", "random")]
     for name, parts in rows:
@@ -82,6 +119,12 @@ def main(argv=None) -> int:
     # of wall, counters) — obs.render of the trace the pipeline recorded
     print("\nrsb pipeline trace (% of wall):")
     print(obs.render(ctx.trace))
+    if sharded_root is not None:
+        import jax
+
+        print(f"\nsharded refinement trace ({len(jax.devices())} devices, "
+              "per-sweep exchange cost):")
+        print(obs.render(sharded_root))
     return 0
 
 

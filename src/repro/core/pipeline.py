@@ -262,6 +262,31 @@ def _stage_kw(fn, post_kw: dict) -> dict:
     return {k: v for k, v in post_kw.items() if k in params}
 
 
+def _refine_sharded_stage(graph, parts, nparts, *, weights=None, sweeps=4,
+                          balance_tol=0.05, corridor=None, backend="auto",
+                          guard=None):
+    """Device-resident sharded boundary refinement (repro.dist).  The
+    signature mirrors dist.refine_sharded.refine_sharded_stage so
+    ``_stage_kw`` filters correctly; the import is lazy because the dist
+    layer imports this module's PartitionContext."""
+    from repro.dist.refine_sharded import refine_sharded_stage
+    return refine_sharded_stage(graph, parts, nparts, weights=weights,
+                                sweeps=sweeps, balance_tol=balance_tol,
+                                corridor=corridor, backend=backend,
+                                guard=guard)
+
+
+def _kway_sharded_stage(graph, parts, nparts, *, weights=None, sweeps=4,
+                        passes=2, balance_tol=0.05, corridor=None,
+                        backend="auto", guard=None):
+    """Sharded sweeps + host boundary k-way polish (repro.dist)."""
+    from repro.dist.refine_sharded import kway_sharded_stage
+    return kway_sharded_stage(graph, parts, nparts, weights=weights,
+                              sweeps=sweeps, passes=passes,
+                              balance_tol=balance_tol, corridor=corridor,
+                              backend=backend, guard=guard)
+
+
 def _register_builtin_stages() -> None:
     from repro.core.rcb import rcb_parts, rib_parts
     from repro.core.sfc import sfc_parts
@@ -283,6 +308,8 @@ def _register_builtin_stages() -> None:
     register_post_stage("repair", repair_components)
     register_post_stage("refine", refine_stage)
     register_post_stage("kway", kway_stage)
+    register_post_stage("refine-sharded", _refine_sharded_stage)
+    register_post_stage("kway-sharded", _kway_sharded_stage)
 
 
 _register_builtin_stages()
@@ -716,9 +743,17 @@ class PartitionPipeline:
         # --- post (one corridor per chain, fixed from the bisection's
         # part weights — see run_post_stages)
         if self.post and with_post:
+            post_kw = dict(self.post_kw)
+            if policy is not None and "guard" not in post_kw:
+                # Stages that declare a ``guard`` keyword (the sharded
+                # refinement pair) get the stage-deadline envelope; the
+                # host stages simply never see it (_stage_kw filters).
+                from repro.guard.policy import SolverGuard
+                post_kw["guard"] = SolverGuard(
+                    policy, seed=0, method="post", report=greport)
             parts, agg, records = run_post_stages(
                 ctx.require_graph(), ctx.parts, nparts, self.post,
-                weights=ctx.weights, post_kw=self.post_kw)
+                weights=ctx.weights, post_kw=post_kw)
             ctx.parts = parts
             ctx.stages.extend(records)
             report.post = agg
@@ -748,6 +783,12 @@ _REFINE_SPECS = {
     # rollback to the best prefix.  Greedy "repair+refine" stays the
     # default until the bench gate proves k-way ≥ greedy across suites.
     "kway": ("kway",), "repair+kway": ("repair", "kway"),
+    # Device-resident sharded refinement (repro.dist.refine_sharded): one
+    # boundary-label all_gather per sweep, Pallas segment-sum gain tables.
+    "refine-sharded": ("refine-sharded",),
+    "repair+refine-sharded": ("repair", "refine-sharded"),
+    "kway-sharded": ("kway-sharded",),
+    "repair+kway-sharded": ("repair", "kway-sharded"),
 }
 
 

@@ -9,6 +9,9 @@ framework's communication:
   (paper §5 under shard_map) and a hand-rolled ring all-reduce reference.
 * :mod:`repro.dist.sharding` — logical-axis → mesh-axis PartitionSpec
   rules for the LM / GNN / recsys model families.
+* :mod:`repro.dist.refine_sharded` — device-resident sharded boundary
+  refinement over the halo plan: one boundary-label all_gather per sweep,
+  Pallas segment-sum gain tables (README: "Sharded refinement").
 """
 
 from repro.dist.collectives import dist_lap_apply_allreduce, ring_allreduce
@@ -21,6 +24,14 @@ from repro.dist.partition_aware import (
     scatter_features,
     verify_halo_plan,
 )
+from repro.dist.refine_sharded import (
+    FrontierPlan,
+    build_frontier_plan,
+    kway_sharded_stage,
+    refine_sharded_host,
+    refine_sharded_stage,
+    run_sharded_sweeps,
+)
 from repro.dist.sharding import (
     MeshRules,
     batch_specs_lm,
@@ -32,20 +43,26 @@ from repro.dist.sharding import (
 )
 
 __all__ = [
+    "FrontierPlan",
     "HaloPlan",
     "MeshRules",
     "adjacency_matvec_distributed",
     "batch_specs_lm",
+    "build_frontier_plan",
     "cache_specs_lm",
     "dist_lap_apply_allreduce",
     "gather_features",
     "gnn_rules",
     "halo_exchange",
+    "kway_sharded_stage",
     "lm_rules",
     "param_specs_lm",
     "plan_halo_sharding",
     "recsys_rules",
+    "refine_sharded_host",
+    "refine_sharded_stage",
     "ring_allreduce",
+    "run_sharded_sweeps",
     "scatter_features",
     "verify_halo_plan",
 ]

@@ -2,6 +2,8 @@
 
 ell_spmv/         Laplacian matvec in transposed-ELL layout — the paper's
                   hot loop (Lanczos / CG / AMG smoothing are all matvec-bound).
+segment_sum/      batched row-wise segment sum — the (boundary × nparts)
+                  connection table of the sharded FM refinement sweep.
 embedding_bag/    recsys lookup-reduce (gather rows + segment-sum).
 flash_attention/  online-softmax attention for the LM archs.
 

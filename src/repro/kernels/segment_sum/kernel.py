@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: batched row-wise segment sum (connection table).
+
+The sharded-refinement hot loop (DESIGN: `dist/refine_sharded.py`) needs,
+per sweep, the (boundary × nparts) *connection-weight table* of every
+shard's frontier: ``conn[i, q] = Σ_k w[i, k] · [label[col[i, k]] == q]``.
+That is a segment sum over the part axis, one segment per part, with the
+segment ids gathered through the ELL adjacency.
+
+Layout differs from `ell_spmv` deliberately: there the *node* axis rides
+the 128 lanes (output is a vector); here the output is a table whose lane
+axis is ``nparts`` (padded to 128), so ELL rows stay row-major —
+``cols/wts : (B, w)`` blocked as ``(block_b, w)`` on the sublane axis —
+and each of the ``w`` neighbor slots is one vectorized
+gather-compare-accumulate sweep into the resident ``(block_b, npad)``
+accumulator.  The combined label vector (n_local + P·halo ≤ ~256k int32 =
+1 MB) stays resident in VMEM, exactly like `ell_spmv`'s dense vector.
+
+Grid: B / block_b row blocks; the **batched variant** adds a leading
+shard-group dimension — one launch computes every shard's frontier table,
+which is what makes the refinement sweep a single kernel launch between
+collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segsum_kernel(labels_ref, cols_ref, wts_ref, out_ref):
+    labels = labels_ref[...]                     # (m,) resident labels
+    cols = cols_ref[...]                         # (bn, w)
+    wts = wts_ref[...].astype(jnp.float32)       # (bn, w)
+    lab = jnp.take(labels, cols, axis=0)         # (bn, w) gathered seg ids
+    bn, npad = out_ref.shape
+    iota = jax.lax.broadcasted_iota(lab.dtype, (1, npad), 1)
+    acc = jnp.zeros((bn, npad), jnp.float32)
+    for k in range(cols.shape[1]):               # w is small and static
+        onehot = (lab[:, k][:, None] == iota).astype(jnp.float32)
+        acc = acc + wts[:, k][:, None] * onehot
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nparts_pad", "block_b", "interpret"))
+def segment_sum_pallas(
+    labels: jax.Array,     # (m,) int32 — segment id per combined-space node
+    cols: jax.Array,       # (B, w) int32 — indices into labels
+    wts: jax.Array,        # (B, w) f32  — padding entries carry weight 0
+    *,
+    nparts_pad: int,       # output segments, padded to a lane multiple
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, w = cols.shape
+    m = labels.shape[0]
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        _segsum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m,), lambda i: (0,)),            # labels: resident
+            pl.BlockSpec((block_b, w), lambda i: (i, 0)),  # cols row block
+            pl.BlockSpec((block_b, w), lambda i: (i, 0)),  # wts row block
+        ],
+        out_specs=pl.BlockSpec((block_b, nparts_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nparts_pad), jnp.float32),
+        interpret=interpret,
+    )(labels, cols, wts)
+
+
+def _segsum_batched_kernel(labels_ref, cols_ref, wts_ref, out_ref):
+    labels = labels_ref[0]                       # (m,) problem g's labels
+    cols = cols_ref[0]                           # (bn, w)
+    wts = wts_ref[0].astype(jnp.float32)         # (bn, w)
+    lab = jnp.take(labels, cols, axis=0)
+    _, bn, npad = out_ref.shape
+    iota = jax.lax.broadcasted_iota(lab.dtype, (1, npad), 1)
+    acc = jnp.zeros((bn, npad), jnp.float32)
+    for k in range(cols.shape[1]):
+        onehot = (lab[:, k][:, None] == iota).astype(jnp.float32)
+        acc = acc + wts[:, k][:, None] * onehot
+    out_ref[0, :, :] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("nparts_pad", "block_b", "interpret"))
+def segment_sum_batched_pallas(
+    labels: jax.Array,     # (G, m) int32 — per-problem label vectors
+    cols: jax.Array,       # (G, B, w) int32
+    wts: jax.Array,        # (G, B, w) f32
+    *,
+    nparts_pad: int,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    G, B, w = cols.shape
+    m = labels.shape[1]
+    assert B % block_b == 0, (B, block_b)
+    grid = (G, B // block_b)
+    return pl.pallas_call(
+        _segsum_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m), lambda g, i: (g, 0)),
+            pl.BlockSpec((1, block_b, w), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, block_b, w), lambda g, i: (g, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, nparts_pad),
+                               lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, B, nparts_pad), jnp.float32),
+        interpret=interpret,
+    )(labels, cols, wts)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the row-wise segment-sum (connection table).
+
+The FM gain computation reduces to a batched segment sum: for every
+boundary node ``i`` the edge weights of its ELL row are summed into
+``nparts`` segments keyed by the *part label* of each neighbor,
+
+    conn[i, q] = Σ_k wts[i, k] · [labels[cols[i, k]] == q]
+
+This module is the naive jnp oracle the Pallas kernel (and the faster
+``ops._xla_loop`` off-TPU production path) are tested against.  It
+materializes the full (B, w, nparts) one-hot — simple to audit, too slow
+to ship (see the dispatch-policy note in ``ops.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def connection_table_ref(labels: jnp.ndarray, cols: jnp.ndarray,
+                         wts: jnp.ndarray, nparts: int) -> jnp.ndarray:
+    """``(B, nparts)`` connection table from row-major ELL adjacency.
+
+    ``labels``: (m,) int — part label per combined-space node;
+    ``cols``/``wts``: (B, w) — neighbor indices into ``labels`` and edge
+    weights (padding: any valid col with weight 0).
+    """
+    lab = jnp.take(labels, cols, axis=0)                      # (B, w)
+    onehot = lab[..., None] == jnp.arange(nparts, dtype=lab.dtype)
+    return jnp.where(onehot, wts[..., None].astype(jnp.float32),
+                     0.0).sum(axis=1)
+
+
+def connection_table_batched_ref(labels: jnp.ndarray, cols: jnp.ndarray,
+                                 wts: jnp.ndarray, nparts: int) -> jnp.ndarray:
+    """Batched oracle: ``labels`` (G, m); ``cols``/``wts`` (G, B, w) →
+    (G, B, nparts).  Problem ``g`` only reads its own label vector."""
+    return jax.vmap(
+        lambda lab, c, v: connection_table_ref(lab, c, v, nparts)
+    )(labels, cols, wts)

@@ -136,6 +136,13 @@ register("halo_bytes", "counter", unit="bytes",
          description="Halo exchange bytes per feature at f32")
 register("halo_max_degree", "gauge", agg="max",
          description="Max neighbor count over shards in the halo plan")
+register("sharded_sweeps", "counter",
+         description="Device-resident sharded refinement sweeps executed")
+register("sharded_gathers", "counter",
+         description="Boundary-label all_gather collectives issued by the "
+                     "sharded refinement loop (contract: == sharded_sweeps)")
+register("sharded_moves", "counter",
+         description="Moves applied by sharded refinement sweeps")
 
 # Fault-tolerance guard (repro.guard)
 register("guard_retries", "counter",

@@ -178,3 +178,80 @@ def test_flash_attention_matches_model_attention():
     out_kernel = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
     np.testing.assert_allclose(np.asarray(out_model), np.asarray(out_kernel),
                                atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# segment_sum: the (boundary × nparts) connection table
+# ---------------------------------------------------------------------------
+
+def _conn_numpy(labels, cols, wts, nparts):
+    """Independent numpy oracle (np.add.at scatter)."""
+    out = np.zeros((cols.shape[0], nparts), np.float32)
+    ri, ki = np.nonzero(np.ones_like(np.asarray(wts), bool))
+    np.add.at(out, (ri, np.asarray(labels)[np.asarray(cols)[ri, ki]]),
+              np.asarray(wts)[ri, ki])
+    return out
+
+
+@pytest.mark.parametrize("B,w,m,nparts", [
+    (37, 5, 120, 13),     # odd everything
+    (8, 1, 9, 1),         # single part, single slot
+    (256, 27, 300, 64),   # block-aligned
+    (130, 3, 200, 129),   # nparts just past one lane tile
+    (5, 4, 16, 2),        # tiny
+])
+def test_segment_sum_parity(B, w, m, nparts):
+    from repro.kernels.segment_sum.ops import connection_table
+
+    labels = jnp.asarray(RNG.integers(0, nparts, m), jnp.int32)
+    cols = jnp.asarray(RNG.integers(0, m, (B, w)), jnp.int32)
+    wts = jnp.asarray(RNG.integers(1, 5, (B, w)), jnp.float32)
+    oracle = _conn_numpy(labels, cols, wts, nparts)
+    for prefer in ("pallas", "ref", "auto"):
+        out = connection_table(labels, cols, wts, nparts, prefer=prefer)
+        np.testing.assert_array_equal(np.asarray(out), oracle), prefer
+
+
+def test_segment_sum_empty_boundary():
+    from repro.kernels.segment_sum.ops import connection_table
+
+    labels = jnp.zeros((7,), jnp.int32)
+    out = connection_table(labels, jnp.zeros((0, 4), jnp.int32),
+                           jnp.zeros((0, 4), jnp.float32), 7)
+    assert out.shape == (0, 7)
+
+
+def test_segment_sum_padding_is_inert():
+    """Weight-0 padding entries contribute nothing regardless of col."""
+    from repro.kernels.segment_sum.ops import connection_table
+
+    labels = jnp.asarray([0, 1, 2, 1], jnp.int32)
+    cols = jnp.asarray([[1, 3, 0], [2, 0, 0]], jnp.int32)
+    wts = jnp.asarray([[2.0, 5.0, 0.0], [3.0, 0.0, 0.0]], jnp.float32)
+    for prefer in ("pallas", "ref"):
+        out = np.asarray(connection_table(labels, cols, wts, 3,
+                                          prefer=prefer))
+        np.testing.assert_array_equal(out, [[0.0, 7.0, 0.0],
+                                            [0.0, 0.0, 3.0]])
+
+
+@pytest.mark.parametrize("G,B,w,m,nparts", [(3, 40, 6, 90, 9),
+                                            (1, 64, 2, 30, 4),
+                                            (5, 17, 3, 50, 33)])
+def test_segment_sum_batched_parity(G, B, w, m, nparts):
+    """Batched launch ≡ per-problem single launches ≡ numpy oracle."""
+    from repro.kernels.segment_sum.ops import (connection_table,
+                                               connection_table_batched)
+
+    labels = jnp.asarray(RNG.integers(0, nparts, (G, m)), jnp.int32)
+    cols = jnp.asarray(RNG.integers(0, m, (G, B, w)), jnp.int32)
+    wts = jnp.asarray(RNG.integers(1, 5, (G, B, w)), jnp.float32)
+    for prefer in ("pallas", "ref"):
+        out = np.asarray(connection_table_batched(labels, cols, wts, nparts,
+                                                  prefer=prefer))
+        for g in range(G):
+            single = connection_table(labels[g], cols[g], wts[g], nparts,
+                                      prefer=prefer)
+            np.testing.assert_array_equal(out[g], np.asarray(single))
+            np.testing.assert_array_equal(
+                out[g], _conn_numpy(labels[g], cols[g], wts[g], nparts))
