@@ -21,7 +21,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 

@@ -21,11 +21,8 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.bench_util import emit, report_cols, stage_seconds
-from repro.core import (PartitionPipeline, partition, partition_metrics,
-                        run_post_stages)
+from repro.core import PartitionPipeline, partition, partition_metrics, run_post_stages
 from repro.dist.partition_aware import plan_halo_sharding
 from repro.mesh import dual_graph, pebble_mesh
 

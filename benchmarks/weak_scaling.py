@@ -9,8 +9,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.bench_util import emit
 from repro.core import comm_time_model, m2_words, partition_metrics, rsb_partition_mesh
 from repro.mesh import box_mesh, dual_graph

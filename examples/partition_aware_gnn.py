@@ -15,8 +15,7 @@ from jax.sharding import AxisType
 
 from repro.core import PartitionPipeline, partition_metrics
 from repro.core.rcb import rcb_parts
-from repro.dist.partition_aware import (adjacency_matvec_distributed,
-                                        plan_halo_sharding)
+from repro.dist.partition_aware import adjacency_matvec_distributed, plan_halo_sharding
 from repro.mesh.graphs import grid_graph_2d
 
 n_shards = 8

@@ -33,14 +33,11 @@ if _ndev > 1 and "xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", "")
         + f" --xla_force_host_platform_device_count={_ndev}").strip()
 
-import numpy as np
 
 from repro import obs
-from repro.core import (PartitionPipeline, partition, partition_metrics,
-                        run_post_stages)
+from repro.core import PartitionPipeline, partition, partition_metrics, run_post_stages
 from repro.dist.partition_aware import plan_halo_sharding, scatter_features
-from repro.guard import (GuardError, check_positive_int, validate_mesh,
-                         validate_nparts)
+from repro.guard import GuardError, check_positive_int, validate_mesh, validate_nparts
 from repro.mesh import dual_graph, pebble_mesh
 
 

@@ -3,7 +3,6 @@
     PYTHONPATH=src python examples/serve_lm.py --batch 4 --steps 32
 """
 
-import sys
 
 from repro.launch.serve import main
 

@@ -1,0 +1,32 @@
+"""`repro.analysis` — rule-based AST static analyzer for the repo's
+load-bearing conventions.
+
+The repo has contracts that runtime checks can only enforce on the code
+paths a test happens to execute: traced/jitted code must never sync to
+host or consume ambient nondeterminism, sharded sweep loops must issue
+exactly one collective per sweep, every span/metric name must be declared
+in :mod:`repro.obs.registry`, chaos sites and guard codes must come from
+their catalogs.  This package checks all of them at lint time, on every
+code path:
+
+* :mod:`repro.analysis.engine` — the visitor framework: per-file AST walk
+  with scope/decorator tracking (rules know when they are inside
+  ``jax.jit`` / ``shard_map`` / ``pallas_call`` / ``fori_loop`` bodies),
+  ``# repro: ignore[RULE]`` suppressions, JSON + human diagnostics.
+* :mod:`repro.analysis.rules` — the rule catalog (see
+  ``src/repro/analysis/README.md`` for ids, rationale, and examples).
+* ``python -m repro.analysis`` — the CLI; runs the full catalog over
+  ``src/repro`` and exits non-zero on findings (the CI lint gate).
+"""
+
+from repro.analysis.engine import (
+    Diagnostic,
+    Project,
+    Rule,
+    analyze_paths,
+    analyze_source,
+)
+from repro.analysis.rules import all_rules
+
+__all__ = ["Diagnostic", "Project", "Rule", "analyze_paths",
+           "analyze_source", "all_rules"]

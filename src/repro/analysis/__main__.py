@@ -1,0 +1,79 @@
+"""``python -m repro.analysis`` — the lint gate.
+
+With no arguments, runs the full rule catalog over the installed
+``repro`` package source (``src/repro`` in a checkout).  Exit codes:
+0 = clean, 1 = findings, 2 = bad invocation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.engine import analyze_paths, findings_json
+from repro.analysis.rules import all_rules
+
+
+def _default_target() -> str:
+    import repro
+    return os.path.dirname(os.path.abspath(repro.__file__))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST contract checker: trace safety, collective "
+                    "discipline, instrumentation drift, guard hygiene.")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to analyze "
+                         "(default: the repro package source)")
+    ap.add_argument("--root", default=None,
+                    help="project root for vocabulary discovery "
+                         "(obs/registry.py, guard/chaos.py, …); "
+                         "defaults to the common path of the targets")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--output", default=None, metavar="FILE",
+                    help="also write the JSON findings report to FILE "
+                         "(the CI artifact)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.id:<8s} {r.name}")
+            print(f"         {r.rationale}")
+        return 0
+
+    paths = args.paths or [_default_target()]
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+
+    diags = analyze_paths(paths, root=args.root, rules=rules)
+    report = findings_json(diags, rules=rules)
+    if args.output:
+        d = os.path.dirname(args.output)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.output, "w") as f:
+            f.write(report)
+    if args.format == "json":
+        print(report)
+    else:
+        for diag in diags:
+            print(diag.render())
+        n_files = len({d.path for d in diags})
+        if diags:
+            print(f"\n{len(diags)} finding(s) in {n_files} file(s)")
+        else:
+            print("repro.analysis: clean "
+                  f"({len(rules)} rules over {', '.join(paths)})")
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

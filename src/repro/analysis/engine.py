@@ -1,0 +1,707 @@
+"""Visitor framework of the static analyzer.
+
+One AST walk per file, shared by every rule.  The walker maintains a
+stack of :class:`Frame` objects so a rule inspecting a node knows the
+*execution context* of the enclosing function, not just its syntax:
+
+* ``traced``  — the body runs under a JAX trace: the function is
+  decorated with (or passed to) ``jax.jit`` / ``vmap`` / ``grad`` /
+  ``shard_map`` / ``pallas_call``, or it is the body callable of
+  ``lax.fori_loop`` / ``while_loop`` / ``scan`` / ``cond``, or it is
+  nested inside such a function.  Host-sync and wall-clock hazards only
+  matter here.
+* ``kernel``  — the function is a Pallas kernel (first argument of a
+  ``pallas_call``).
+* ``shard``   — the body runs under ``shard_map``; ``axes`` carries the
+  mesh axis names recovered from the mapping call's specs.
+* ``proto``   — the function takes an ``axis_name`` parameter (or is
+  nested in one that does): a collective-protocol helper that is meant
+  to be called under ``shard_map`` even when the mapping call is in
+  another module.
+* ``loop_depth`` — lexical loop nesting inside the current function;
+  body callables handed to ``fori_loop``/``while_loop``/``scan`` enter
+  with the *caller's* depth + 1, because that is how often they run.
+
+Tracking is name-based and intra-module: ``fn = functools.partial(f, …)``
+followed by ``shard_map(fn, …)`` marks ``f``; aliases resolve through
+simple assignments in the enclosing scopes.  That is deliberately
+conservative — cross-module call graphs are out of scope; rules that
+need them take the ``proto`` escape hatch above.
+
+Suppressions: a ``# repro: ignore[RULE1,RULE2]`` (or a bare
+``# repro: ignore``) comment on the flagged line or the line directly
+above silences the listed rules (all rules when bare) for that line.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding: rule id, location, human message."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+
+# ---------------------------------------------------------------------------
+# Project context: the vocabularies rules check names against
+# ---------------------------------------------------------------------------
+
+
+def _literal_strings(node) -> list:
+    """Every string constant anywhere in ``node``'s subtree (source order)."""
+    return [n.value for n in ast.walk(node)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)]
+
+
+def _parse_assign_tuples(tree: ast.Module, names) -> dict:
+    """``{name: [string literals]}`` for top-level assignments to ``names``."""
+    out = {n: [] for n in names}
+    for stmt in tree.body:
+        if not isinstance(stmt, ast.Assign):
+            continue
+        for tgt in stmt.targets:
+            if isinstance(tgt, ast.Name) and tgt.id in out:
+                out[tgt.id] = _literal_strings(stmt.value)
+    return out
+
+
+class Project:
+    """Repo-level vocabularies, parsed statically from their source of
+    truth so the analyzer never imports the code it checks:
+
+    * ``metric_names`` — ``register("…", …)`` literals in
+      ``obs/registry.py`` (counter/gauge names).
+    * ``span_names`` / ``span_prefixes`` — the ``SPAN_NAMES`` /
+      ``SPAN_PREFIXES`` declarations in ``obs/registry.py``.
+    * ``fault_sites`` — ``FAULT_SITES`` in ``guard/chaos.py``.
+    * ``guard_codes`` — ``KNOWN_CODES`` in ``guard/errors.py`` (with
+      literal duplicates preserved for the uniqueness check).
+    """
+
+    def __init__(self, root: str | None = None, *,
+                 metric_names=None, span_names=None, span_prefixes=None,
+                 fault_sites=None, guard_codes=None):
+        self.root = root
+        self.metric_names = set(metric_names or ())
+        self.span_names = set(span_names or ())
+        self.span_prefixes = tuple(span_prefixes or ())
+        self.fault_sites = set(fault_sites or ())
+        self.guard_code_list = list(guard_codes or ())
+        self.guard_codes = set(self.guard_code_list)
+        self.guard_codes_path = None
+        if root:
+            self._discover(root)
+
+    def _find(self, root: str, rel: str):
+        """Locate ``rel`` (e.g. ``obs/registry.py``) under ``root``."""
+        direct = os.path.join(root, rel)
+        if os.path.isfile(direct):
+            return direct
+        for dirpath, _dirs, files in os.walk(root):
+            cand = os.path.join(dirpath, rel)
+            if os.path.isfile(cand):
+                return cand
+        return None
+
+    def _discover(self, root: str) -> None:
+        reg = self._find(root, os.path.join("obs", "registry.py"))
+        if reg:
+            tree = ast.parse(open(reg).read())
+            for node in ast.walk(tree):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id == "register"
+                        and node.args
+                        and isinstance(node.args[0], ast.Constant)):
+                    self.metric_names.add(node.args[0].value)
+            spans = _parse_assign_tuples(tree, ("SPAN_NAMES",
+                                                "SPAN_PREFIXES"))
+            self.span_names.update(spans["SPAN_NAMES"])
+            self.span_prefixes = self.span_prefixes + tuple(
+                spans["SPAN_PREFIXES"])
+        chaos = self._find(root, os.path.join("guard", "chaos.py"))
+        if chaos:
+            tree = ast.parse(open(chaos).read())
+            sites = _parse_assign_tuples(tree, ("FAULT_SITES",))
+            self.fault_sites.update(sites["FAULT_SITES"])
+        errors = self._find(root, os.path.join("guard", "errors.py"))
+        if errors:
+            tree = ast.parse(open(errors).read())
+            codes = _parse_assign_tuples(tree, ("KNOWN_CODES",))
+            self.guard_code_list.extend(codes["KNOWN_CODES"])
+            self.guard_codes = set(self.guard_code_list)
+            self.guard_codes_path = errors
+
+    def span_declared(self, name: str) -> bool:
+        if name in self.span_names:
+            return True
+        return any(name.startswith(p) for p in self.span_prefixes)
+
+
+# ---------------------------------------------------------------------------
+# Name helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted(node) -> str | None:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def suffix(name: str | None) -> str | None:
+    """Last dotted component (``jax.lax.psum`` → ``psum``)."""
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+# Wrappers whose callable argument runs under a JAX trace.
+TRACE_WRAPPERS = frozenset({
+    "jit", "pjit", "vmap", "pmap", "grad", "value_and_grad",
+    "checkpoint", "remat", "custom_jvp", "custom_vjp",
+})
+SHARD_WRAPPERS = frozenset({"shard_map"})
+KERNEL_WRAPPERS = frozenset({"pallas_call"})
+# callee suffix -> indices of callable args that become (traced) loop bodies
+LOOP_BODY_ARGS = {"fori_loop": (2,), "while_loop": (0, 1), "scan": (0,)}
+BRANCH_BODY_ARGS = {"cond": (1, 2), "switch": (1, 2, 3, 4, 5)}
+
+_DEF_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+# ---------------------------------------------------------------------------
+# Module index: lexical scopes + traced/shard/kernel marks
+# ---------------------------------------------------------------------------
+
+
+class _Scope:
+    __slots__ = ("node", "parent", "assigns", "defs")
+
+    def __init__(self, node, parent):
+        self.node = node
+        self.parent = parent
+        self.assigns: dict = {}     # name -> value expression at this level
+        self.defs: dict = {}        # name -> def node at this level
+
+    def lookup_assign(self, name):
+        s = self
+        while s is not None:
+            if name in s.assigns:
+                return s.assigns[name]
+            s = s.parent
+        return None
+
+    def lookup_def(self, name):
+        s = self
+        while s is not None:
+            if name in s.defs:
+                return s.defs[name]
+            s = s.parent
+        return None
+
+
+@dataclasses.dataclass
+class _Marks:
+    traced: bool = False
+    shard: bool = False
+    kernel: bool = False
+    loop_body: bool = False
+    axes: frozenset = frozenset()
+
+    def merge(self, other: "_Marks") -> None:
+        self.traced |= other.traced
+        self.shard |= other.shard
+        self.kernel |= other.kernel
+        self.loop_body |= other.loop_body
+        self.axes |= other.axes
+
+
+class ModuleIndex:
+    """Pre-pass over one module: scope tree, per-def trace marks, and the
+    module's mesh-axis vocabulary."""
+
+    def __init__(self, tree: ast.Module):
+        self.scope_of: dict = {}        # id(def/module node) -> _Scope
+        self.marks: dict = {}           # id(def node) -> _Marks
+        self.axis_vocab: set = set()
+        self._calls: list = []          # (Call node, enclosing _Scope)
+        self._build(tree, None)
+        self._mark_decorators()
+        self._mark_calls()
+
+    # -- scope construction --------------------------------------------------
+
+    def _build(self, node, parent: _Scope | None) -> _Scope:
+        scope = _Scope(node, parent)
+        self.scope_of[id(node)] = scope
+
+        def rec(n):
+            for child in ast.iter_child_nodes(n):
+                if isinstance(child, _DEF_NODES):
+                    if isinstance(child, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                        scope.defs[child.name] = child
+                    self._build(child, scope)
+                    continue
+                if isinstance(child, ast.Assign) and len(child.targets) == 1:
+                    tgt = child.targets[0]
+                    if isinstance(tgt, ast.Name):
+                        scope.assigns[tgt.id] = child.value
+                if isinstance(child, ast.Call):
+                    self._calls.append((child, scope))
+                    self._note_axes(child)
+                rec(child)
+
+        rec(node)
+        return scope
+
+    def _note_axes(self, call: ast.Call) -> None:
+        """Mesh-axis names declared by this call, if it is a spec/mesh
+        constructor (``P``/``PartitionSpec``/``Mesh``/``make_mesh``) or
+        carries an ``axis_name(s)=`` keyword."""
+        sfx = suffix(dotted(call.func))
+        if sfx in ("P", "PartitionSpec", "Mesh", "make_mesh"):
+            for arg in call.args:
+                self.axis_vocab.update(_literal_strings(arg))
+        for kw in call.keywords:
+            if kw.arg in ("axis_name", "axis_names"):
+                self.axis_vocab.update(_literal_strings(kw.value))
+
+    # -- callable resolution -------------------------------------------------
+
+    def _resolve_callable(self, expr, scope: _Scope, depth: int = 0):
+        """Candidate function nodes an expression may evaluate to:
+        follows Name aliases, ``functools.partial(f, …)``, and nested
+        wrapper calls (``jax.jit(f)``)."""
+        if depth > 6 or expr is None:
+            return
+        if isinstance(expr, _DEF_NODES):
+            yield expr
+        elif isinstance(expr, ast.Name):
+            d = scope.lookup_def(expr.id)
+            if d is not None:
+                yield d
+            val = scope.lookup_assign(expr.id)
+            if val is not None and not isinstance(val, ast.Name):
+                yield from self._resolve_callable(val, scope, depth + 1)
+        elif isinstance(expr, ast.Call):
+            sfx = suffix(dotted(expr.func))
+            if sfx == "partial" and expr.args:
+                yield from self._resolve_callable(expr.args[0], scope,
+                                                  depth + 1)
+            elif sfx in (TRACE_WRAPPERS | SHARD_WRAPPERS) and expr.args:
+                yield from self._resolve_callable(expr.args[0], scope,
+                                                  depth + 1)
+
+    def _mark(self, expr, scope: _Scope, **flags) -> None:
+        for node in self._resolve_callable(expr, scope):
+            m = self.marks.setdefault(id(node), _Marks())
+            m.merge(_Marks(**flags))
+
+    def _shard_axes(self, call: ast.Call, scope: _Scope) -> frozenset:
+        """Axis names recoverable from a ``shard_map`` call: strings in
+        its spec/mesh keywords, resolving one level of Name aliasing."""
+        axes: set = set()
+        exprs = [kw.value for kw in call.keywords
+                 if kw.arg in ("mesh", "in_specs", "out_specs",
+                               "axis_names")]
+        exprs += call.args[1:]
+        for e in exprs:
+            axes.update(_literal_strings(e))
+            for n in ast.walk(e):
+                if isinstance(n, ast.Name):
+                    val = scope.lookup_assign(n.id)
+                    if val is not None:
+                        axes.update(_literal_strings(val))
+        return frozenset(axes)
+
+    # -- marking passes ------------------------------------------------------
+
+    def _decorator_marks(self, dec, scope: _Scope) -> _Marks | None:
+        name = dotted(dec)
+        if name is None and isinstance(dec, ast.Call):
+            fname = suffix(dotted(dec.func))
+            if fname == "partial" and dec.args:
+                inner = suffix(dotted(dec.args[0]))
+                if inner in TRACE_WRAPPERS:
+                    return _Marks(traced=True)
+                if inner in SHARD_WRAPPERS:
+                    return _Marks(traced=True, shard=True,
+                                  axes=self._shard_axes(dec, scope))
+            elif fname in TRACE_WRAPPERS:
+                return _Marks(traced=True)
+            elif fname in SHARD_WRAPPERS:
+                return _Marks(traced=True, shard=True,
+                              axes=self._shard_axes(dec, scope))
+            return None
+        sfx = suffix(name)
+        if sfx in TRACE_WRAPPERS:
+            return _Marks(traced=True)
+        if sfx in SHARD_WRAPPERS:
+            return _Marks(traced=True, shard=True)
+        return None
+
+    def _mark_decorators(self) -> None:
+        for scope in list(self.scope_of.values()):
+            node = scope.node
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                m = self._decorator_marks(dec, scope.parent or scope)
+                if m is not None:
+                    got = self.marks.setdefault(id(node), _Marks())
+                    got.merge(m)
+
+    def _mark_calls(self) -> None:
+        for call, scope in self._calls:
+            sfx = suffix(dotted(call.func))
+            if sfx in SHARD_WRAPPERS and call.args:
+                axes = self._shard_axes(call, scope)
+                self._mark(call.args[0], scope, traced=True, shard=True,
+                           axes=axes)
+            elif sfx in TRACE_WRAPPERS and call.args:
+                self._mark(call.args[0], scope, traced=True)
+            elif sfx in KERNEL_WRAPPERS and call.args:
+                self._mark(call.args[0], scope, traced=True, kernel=True)
+            elif sfx in LOOP_BODY_ARGS:
+                for i in LOOP_BODY_ARGS[sfx]:
+                    if i < len(call.args):
+                        self._mark(call.args[i], scope, traced=True,
+                                   loop_body=True)
+            elif sfx in BRANCH_BODY_ARGS:
+                for i in BRANCH_BODY_ARGS[sfx]:
+                    if i < len(call.args):
+                        self._mark(call.args[i], scope, traced=True)
+
+    def marks_for(self, node) -> _Marks:
+        return self.marks.get(id(node), _Marks())
+
+
+# ---------------------------------------------------------------------------
+# Walk context handed to rules
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Frame:
+    node: object
+    traced: bool = False
+    shard: bool = False
+    kernel: bool = False
+    proto: bool = False          # takes (or inherits) an axis_name param
+    axes: frozenset = frozenset()
+    loop_depth: int = 0
+
+
+class FileContext:
+    """Per-file state rules read during the walk."""
+
+    def __init__(self, path: str, tree: ast.Module, source: str,
+                 project: Project):
+        self.path = path
+        self.tree = tree
+        self.source = source
+        self.project = project
+        self.index = ModuleIndex(tree)
+        self.frames: list = [Frame(node=tree)]
+
+    # -- frame properties ----------------------------------------------------
+
+    @property
+    def frame(self) -> Frame:
+        return self.frames[-1]
+
+    @property
+    def traced(self) -> bool:
+        return self.frame.traced
+
+    @property
+    def kernel(self) -> bool:
+        return self.frame.kernel
+
+    @property
+    def shard(self) -> bool:
+        return self.frame.shard
+
+    @property
+    def proto(self) -> bool:
+        return self.frame.proto
+
+    @property
+    def axes(self) -> frozenset:
+        return self.frame.axes
+
+    @property
+    def loop_depth(self) -> int:
+        return self.frame.loop_depth
+
+    @property
+    def axis_vocab(self) -> set:
+        return self.index.axis_vocab
+
+    def lookup(self, name: str):
+        """Innermost assignment expression bound to ``name`` (per-scope)."""
+        for frame in reversed(self.frames):
+            scope = self.index.scope_of.get(id(frame.node))
+            if scope is not None:
+                val = scope.lookup_assign(name)
+                if val is not None:
+                    return val
+        return None
+
+    def diag(self, rule: "Rule", node, message: str) -> Diagnostic:
+        return Diagnostic(rule=rule.id, path=self.path,
+                          line=getattr(node, "lineno", 1),
+                          col=getattr(node, "col_offset", 0) + 1,
+                          message=message)
+
+
+class Rule:
+    """Base class of the catalog (see ``rules/``).
+
+    Subclasses set ``id``/``name``/``rationale`` and implement any of:
+
+    * ``node_types`` + :meth:`check_node` — called for every matching AST
+      node with the live :class:`FileContext`;
+    * :meth:`observe_module` — called once per file after its walk, to
+      accumulate cross-file state;
+    * :meth:`finalize` — called once per run, after every file.
+    """
+
+    id: str = "RULE000"
+    name: str = ""
+    rationale: str = ""
+    node_types: tuple = ()
+
+    def check_node(self, node, ctx: FileContext):
+        return ()
+
+    def observe_module(self, ctx: FileContext):
+        return ()
+
+    def finalize(self, project: Project):
+        return ()
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*ignore(?:\[\s*([A-Za-z0-9_,\s]+?)\s*\])?")
+
+
+def parse_suppressions(source: str) -> dict:
+    """``{line_number: set of rule ids}`` (empty set == all rules);
+    a suppression covers its own line and the line below it."""
+    out: dict = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        rules = (set(r.strip() for r in m.group(1).split(",") if r.strip())
+                 if m.group(1) else set())
+        for ln in (i, i + 1):
+            if ln in out and out[ln] and rules:
+                out[ln] |= rules
+            elif rules and ln not in out:
+                out[ln] = set(rules)
+            else:
+                out[ln] = set()      # bare ignore wins: all rules
+    return out
+
+
+def _suppressed(diag: Diagnostic, supp: dict) -> bool:
+    if diag.line not in supp:
+        return False
+    rules = supp[diag.line]
+    return not rules or diag.rule in rules
+
+
+# ---------------------------------------------------------------------------
+# The walk
+# ---------------------------------------------------------------------------
+
+
+def _collect_params(node) -> set:
+    args = node.args
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return set(names)
+
+
+def _walk_file(ctx: FileContext, rules_by_type: dict) -> list:
+    diags: list = []
+
+    def dispatch(node):
+        for rule in rules_by_type.get(type(node), ()):
+            diags.extend(rule.check_node(node, ctx))
+
+    def visit(node):
+        if isinstance(node, _DEF_NODES):
+            parent = ctx.frame
+            marks = ctx.index.marks_for(node)
+            params = _collect_params(node)
+            frame = Frame(
+                node=node,
+                traced=parent.traced or marks.traced,
+                shard=parent.shard or marks.shard,
+                kernel=parent.kernel or marks.kernel,
+                proto=parent.proto or "axis_name" in params,
+                axes=parent.axes | marks.axes,
+                loop_depth=(parent.loop_depth + 1 if marks.loop_body else 0),
+            )
+            ctx.frames.append(frame)
+            dispatch(node)
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+            ctx.frames.pop()
+            return
+        loop = isinstance(node, (ast.For, ast.AsyncFor, ast.While))
+        if loop:
+            ctx.frame.loop_depth += 1
+        dispatch(node)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+        if loop:
+            ctx.frame.loop_depth -= 1
+
+    visit(ctx.tree)
+    return diags
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def _expand(paths) -> list:
+    files: list = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                files.extend(os.path.join(dirpath, n)
+                             for n in sorted(names) if n.endswith(".py"))
+        elif p.endswith(".py"):
+            files.append(p)
+    return files
+
+
+def analyze_source(source: str, *, path: str = "<memory>",
+                   project: Project | None = None,
+                   rules=None) -> list:
+    """Analyze one source string (fixtures, tests)."""
+    from repro.analysis.rules import all_rules
+
+    rules = list(rules) if rules is not None else all_rules()
+    project = project or Project()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Diagnostic(rule="PARSE", path=path, line=e.lineno or 1,
+                           col=(e.offset or 0) + 1,
+                           message=f"syntax error: {e.msg}")]
+    ctx = FileContext(path, tree, source, project)
+    rules_by_type: dict = {}
+    for rule in rules:
+        for t in rule.node_types:
+            rules_by_type.setdefault(t, []).append(rule)
+    diags = _walk_file(ctx, rules_by_type)
+    for rule in rules:
+        diags.extend(rule.observe_module(ctx))
+    supp = parse_suppressions(source)
+    return [d for d in diags if not _suppressed(d, supp)]
+
+
+def analyze_paths(paths, *, root: str | None = None,
+                  project: Project | None = None, rules=None) -> list:
+    """Run the catalog over files/directories; returns sorted findings."""
+    from repro.analysis.rules import all_rules
+
+    rules = list(rules) if rules is not None else all_rules()
+    files = _expand(paths)
+    if project is None:
+        base = root
+        if base is None and files:
+            base = os.path.commonpath([os.path.abspath(f) for f in files])
+            if os.path.isfile(base):
+                base = os.path.dirname(base)
+        project = Project(base)
+    diags: list = []
+    supp_by_path: dict = {}
+    for f in files:
+        try:
+            source = open(f, encoding="utf-8").read()
+        except OSError as e:
+            diags.append(Diagnostic(rule="PARSE", path=f, line=1, col=1,
+                                    message=f"unreadable: {e}"))
+            continue
+        supp_by_path[f] = parse_suppressions(source)
+        try:
+            tree = ast.parse(source)
+        except SyntaxError as e:
+            diags.append(Diagnostic(
+                rule="PARSE", path=f, line=e.lineno or 1,
+                col=(e.offset or 0) + 1, message=f"syntax error: {e.msg}"))
+            continue
+        ctx = FileContext(f, tree, source, project)
+        rules_by_type: dict = {}
+        for rule in rules:
+            for t in rule.node_types:
+                rules_by_type.setdefault(t, []).append(rule)
+        diags.extend(_walk_file(ctx, rules_by_type))
+        for rule in rules:
+            diags.extend(rule.observe_module(ctx))
+    for rule in rules:
+        diags.extend(rule.finalize(project))
+    diags = [d for d in diags
+             if not _suppressed(d, supp_by_path.get(d.path, {}))]
+    return sorted(diags, key=lambda d: (d.path, d.line, d.col, d.rule))
+
+
+def findings_json(diags, *, rules=None) -> str:
+    """The machine-readable report the CI job uploads as an artifact."""
+    from repro.analysis.rules import all_rules
+
+    rules = list(rules) if rules is not None else all_rules()
+    counts: dict = {}
+    for d in diags:
+        counts[d.rule] = counts.get(d.rule, 0) + 1
+    return json.dumps({
+        "schema": "repro.analysis/v1",
+        "findings": [d.to_dict() for d in diags],
+        "counts": counts,
+        "rules": [{"id": r.id, "name": r.name} for r in rules],
+    }, indent=2)

@@ -1,0 +1,39 @@
+"""The rule catalog.  Ids are stable (suppressions reference them);
+see ``src/repro/analysis/README.md`` for the full table."""
+
+from repro.analysis.rules.collective_rules import CollectiveInLoop, UnknownAxisName
+from repro.analysis.rules.determinism_rules import (
+    SetIterationOrder,
+    UnseededRandom,
+    WallClockInTrace,
+)
+from repro.analysis.rules.guard_rules import GuardCodeDiscipline, UnknownChaosSite
+from repro.analysis.rules.obs_rules import UndeclaredSpan, UnregisteredMetric
+from repro.analysis.rules.pallas_rules import BlockSpecGridRank, KernelTriple
+from repro.analysis.rules.trace_rules import HostSyncInTrace, TracedPythonBranch
+
+_CATALOG = (
+    HostSyncInTrace,
+    TracedPythonBranch,
+    WallClockInTrace,
+    UnseededRandom,
+    SetIterationOrder,
+    CollectiveInLoop,
+    UnknownAxisName,
+    BlockSpecGridRank,
+    KernelTriple,
+    UndeclaredSpan,
+    UnregisteredMetric,
+    UnknownChaosSite,
+    GuardCodeDiscipline,
+)
+
+
+def all_rules() -> list:
+    """Fresh instances of every catalog rule (rules may carry per-run
+    state for ``observe_module``/``finalize``)."""
+    return [cls() for cls in _CATALOG]
+
+
+def rule_ids() -> list:
+    return [cls.id for cls in _CATALOG]

@@ -1,0 +1,92 @@
+"""DIST rules: collective discipline under ``shard_map``.
+
+The sharded-refinement protocol (``dist/refine_sharded.py``) is built on
+ONE fused ``all_gather`` per sweep; ``smoke_check.check_dist_refine``
+verifies the count at runtime, but only on the paths a benchmark happens
+to execute.  These rules check every path: a collective inside a loop
+body of a shard-mapped function multiplies the per-sweep wire volume,
+and an axis name that no mesh in the module declares is a typo that
+XLA reports only at run time, deep inside a trace.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Rule, dotted, suffix
+
+COLLECTIVES = frozenset({
+    "all_gather", "psum", "pmean", "pmax", "pmin", "ppermute",
+    "all_to_all", "pshuffle", "psum_scatter",
+})
+_AXIS_QUERIES = frozenset({"axis_index", "axis_size"})
+
+
+def _axis_literals(node: ast.Call) -> list:
+    """String axis names passed to a collective: the ``axis_name``
+    keyword, or the conventional second positional argument (first for
+    ``axis_index``/``axis_size``)."""
+    out = []
+    for kw in node.keywords:
+        if kw.arg == "axis_name" and isinstance(kw.value, ast.Constant) \
+                and isinstance(kw.value.value, str):
+            out.append(kw.value.value)
+    sfx = suffix(dotted(node.func))
+    pos = 0 if sfx in _AXIS_QUERIES else 1
+    if len(node.args) > pos:
+        arg = node.args[pos]
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            out.append(arg.value)
+        elif isinstance(arg, (ast.Tuple, ast.List)):
+            out.extend(e.value for e in arg.elts
+                       if isinstance(e, ast.Constant)
+                       and isinstance(e.value, str))
+    return out
+
+
+class CollectiveInLoop(Rule):
+    id = "DIST001"
+    name = "collective-inside-loop-body"
+    rationale = ("Shard-mapped sweeps issue exactly one fused collective "
+                 "per sweep; a collective inside a loop body (Python or "
+                 "`fori_loop`/`while_loop`/`scan`) of a shard-mapped "
+                 "function — or of an `axis_name`-taking protocol helper "
+                 "— multiplies the wire volume per sweep.")
+    node_types = (ast.Call,)
+
+    def check_node(self, node, ctx):
+        sfx = suffix(dotted(node.func))
+        if sfx not in COLLECTIVES:
+            return
+        if not (ctx.shard or ctx.proto):
+            return
+        if ctx.loop_depth >= 1:
+            yield ctx.diag(
+                self, node,
+                f"collective `{sfx}` at loop depth {ctx.loop_depth} inside "
+                "a shard-mapped scope — the protocol is ONE fused "
+                "collective per sweep; hoist it or batch the payload")
+
+
+class UnknownAxisName(Rule):
+    id = "DIST002"
+    name = "collective-axis-name-mismatch"
+    rationale = ("A collective's axis name must match an axis the module "
+                 "declares (via `P(...)`/`PartitionSpec`/`Mesh`/"
+                 "`make_mesh`/`axis_name=`); a mismatch is an XLA "
+                 "trace-time error that surfaces far from the typo.")
+    node_types = (ast.Call,)
+
+    def check_node(self, node, ctx):
+        sfx = suffix(dotted(node.func))
+        if sfx not in (COLLECTIVES | _AXIS_QUERIES):
+            return
+        vocab = ctx.axis_vocab
+        if not vocab:            # module declares no mesh: nothing to match
+            return
+        for name in _axis_literals(node):
+            if name not in vocab:
+                yield ctx.diag(
+                    self, node,
+                    f"collective `{sfx}` uses axis name {name!r} but this "
+                    f"module only declares axes {sorted(vocab)}")

@@ -1,0 +1,110 @@
+"""DET rules: ambient nondeterminism.
+
+Every solver path is keyed by an explicit seed (``(seed, level, node,
+attempt)`` in the guard ladder) precisely so reruns are bit-identical.
+Wall-clock reads inside traced code, the legacy global NumPy RNG, and
+set-iteration order are the three ways ambient state leaks back in.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Rule, dotted
+
+_CLOCK_ROOTS = ("time.", "datetime.")
+_LEGACY_NP_RANDOM = frozenset({
+    "rand", "randn", "randint", "random", "random_sample", "choice",
+    "shuffle", "permutation", "normal", "uniform", "standard_normal",
+    "seed", "binomial", "poisson", "exponential",
+})
+_STDLIB_RANDOM = frozenset({
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "uniform", "sample", "gauss", "normalvariate", "betavariate",
+})
+
+
+class WallClockInTrace(Rule):
+    id = "DET001"
+    name = "wall-clock-in-traced-code"
+    rationale = ("`time.*` / `datetime.*` inside traced or kernel code is "
+                 "evaluated once at trace time and baked into the compiled "
+                 "program — timings belong in the host driver "
+                 "(`repro.obs.timed`).")
+    node_types = (ast.Call,)
+
+    def check_node(self, node, ctx):
+        if not (ctx.traced or ctx.kernel):
+            return
+        name = dotted(node.func) or ""
+        if name.startswith(_CLOCK_ROOTS):
+            yield ctx.diag(self, node,
+                           f"`{name}()` inside traced code reads the wall "
+                           "clock at trace time, not at run time")
+
+
+class UnseededRandom(Rule):
+    id = "DET002"
+    name = "unseeded-global-rng"
+    rationale = ("The legacy global `np.random.*` functions and unseeded "
+                 "`default_rng()` draw from ambient process state; every "
+                 "RNG in this repo must be a seeded Generator so reruns "
+                 "replay bit-for-bit.")
+    node_types = (ast.Call,)
+
+    def check_node(self, node, ctx):
+        name = dotted(node.func)
+        if not name:
+            return
+        parts = name.split(".")
+        # np.random.<legacy fn>(...)  — the module-level global RNG.
+        if (len(parts) == 3 and parts[0] in ("np", "numpy")
+                and parts[1] == "random"):
+            if parts[2] == "default_rng":
+                if not node.args and not node.keywords:
+                    yield ctx.diag(self, node,
+                                   "`np.random.default_rng()` without a "
+                                   "seed draws entropy from the OS; pass "
+                                   "an explicit seed")
+            elif parts[2] in _LEGACY_NP_RANDOM:
+                yield ctx.diag(self, node,
+                               f"`{name}` uses the legacy *global* NumPy "
+                               "RNG; use a seeded "
+                               "`np.random.default_rng(seed)` Generator")
+        # stdlib random.<fn>(...)
+        elif (len(parts) == 2 and parts[0] == "random"
+                and parts[1] in _STDLIB_RANDOM):
+            yield ctx.diag(self, node,
+                           f"`{name}` draws from the process-global stdlib "
+                           "RNG; use a seeded `random.Random(seed)` or a "
+                           "NumPy Generator")
+
+
+class SetIterationOrder(Rule):
+    id = "DET003"
+    name = "set-iteration-order"
+    rationale = ("Iterating a set directly yields hash order, which varies "
+                 "across processes (PYTHONHASHSEED) — data fed to device "
+                 "arrays or emitted into reports must come from "
+                 "`sorted(...)` or an ordered container.")
+    node_types = (ast.For, ast.comprehension)
+
+    def _is_set_expr(self, expr) -> bool:
+        if isinstance(expr, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Name):
+            return expr.func.id in ("set", "frozenset")
+        if isinstance(expr, ast.BinOp) and isinstance(
+                expr.op, (ast.BitOr, ast.BitAnd, ast.Sub)):
+            return self._is_set_expr(expr.left) or self._is_set_expr(
+                expr.right)
+        return False
+
+    def check_node(self, node, ctx):
+        it = node.iter
+        if self._is_set_expr(it):
+            # comprehension nodes carry no lineno; anchor on the iterable
+            yield ctx.diag(self, it,
+                           "iteration over a set is hash-ordered (varies "
+                           "across processes); wrap in `sorted(...)` "
+                           "before the order can feed device arrays")

@@ -1,0 +1,145 @@
+"""PAL rules: Pallas kernel contracts.
+
+A ``pallas_call``'s grid, BlockSpec index maps, and block shapes must
+agree on rank — a mismatch compiles to garbage indexing or fails deep in
+Mosaic, far from the typo.  And every kernel in ``kernels/*/`` ships as
+a triple (``kernel.py`` + ``ref.py`` + ``ops.py``) whose dispatch layer
+consults both, which is what the parity tests and the `prefer="auto"`
+fallbacks rely on.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.engine import Rule, dotted, suffix
+
+
+def _tuple_len(expr, ctx):
+    """Static length of a tuple/list expression, resolving one level of
+    Name indirection through the enclosing scopes; None if unknown."""
+    if isinstance(expr, ast.Name):
+        expr = ctx.lookup(expr.id)
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        if any(isinstance(e, ast.Starred) for e in expr.elts):
+            return None
+        return len(expr.elts)
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, int):
+        return 1                       # grid=8 is shorthand for (8,)
+    return None
+
+
+class BlockSpecGridRank(Rule):
+    id = "PAL001"
+    name = "blockspec-grid-rank-mismatch"
+    rationale = ("Each BlockSpec index_map takes one argument per grid "
+                 "dimension and returns one coordinate per block-shape "
+                 "dimension; a rank mismatch indexes the wrong blocks.")
+    node_types = (ast.Call,)
+
+    def _check_spec(self, spec: ast.Call, grid_len, ctx):
+        if len(spec.args) < 2:
+            return
+        shape_len = _tuple_len(spec.args[0], ctx)
+        index_map = spec.args[1]
+        if not isinstance(index_map, ast.Lambda):
+            return
+        # defaulted lambda params (`lambda h, qi, g=G: ...`) are closure
+        # captures, not grid arguments — only required params count
+        arity = len(index_map.args.args) - len(index_map.args.defaults)
+        if grid_len is not None and arity != grid_len:
+            yield ctx.diag(
+                self, spec,
+                f"BlockSpec index_map takes {arity} argument(s) but the "
+                f"grid has {grid_len} dimension(s)")
+        ret = index_map.body
+        ret_len = None
+        if isinstance(ret, (ast.Tuple, ast.List)):
+            ret_len = len(ret.elts)
+        if (ret_len is not None and shape_len is not None
+                and ret_len != shape_len):
+            yield ctx.diag(
+                self, spec,
+                f"BlockSpec index_map returns {ret_len} coordinate(s) for "
+                f"a {shape_len}-dimensional block_shape")
+
+    def check_node(self, node, ctx):
+        if suffix(dotted(node.func)) != "pallas_call":
+            return
+        grid_len = None
+        spec_exprs = []
+        for kw in node.keywords:
+            if kw.arg == "grid":
+                grid_len = _tuple_len(kw.value, ctx)
+            elif kw.arg in ("in_specs", "out_specs"):
+                spec_exprs.append(kw.value)
+        for expr in spec_exprs:
+            for n in ast.walk(expr):
+                if (isinstance(n, ast.Call)
+                        and suffix(dotted(n.func)) == "BlockSpec"):
+                    yield from self._check_spec(n, grid_len, ctx)
+
+
+class KernelTriple(Rule):
+    id = "PAL002"
+    name = "kernel-triple-contract"
+    rationale = ("Every `kernels/<name>/` package ships kernel.py (Pallas) "
+                 "+ ref.py (jnp reference) + ops.py (dispatch); ops.py "
+                 "must import both so the parity tests and runtime "
+                 "fallbacks always have the reference path.")
+    node_types = ()
+
+    def __init__(self):
+        self._triples: dict = {}      # dir -> {basename: (path, tree)}
+
+    def observe_module(self, ctx):
+        parts = os.path.normpath(ctx.path).split(os.sep)
+        base = os.path.basename(ctx.path)
+        if "kernels" not in parts or base not in ("kernel.py", "ref.py",
+                                                  "ops.py"):
+            return ()
+        kdir = os.path.dirname(ctx.path)
+        if os.path.basename(os.path.dirname(kdir)) != "kernels":
+            return ()
+        self._triples.setdefault(kdir, {})[base] = (ctx.path, ctx.tree)
+        return ()
+
+    def _imports_of(self, tree) -> set:
+        mods: set = set()
+        for n in ast.walk(tree):
+            if isinstance(n, ast.ImportFrom) and n.module:
+                mods.add(n.module.rsplit(".", 1)[-1])
+                mods.update(a.name for a in n.names)
+            elif isinstance(n, ast.Import):
+                for a in n.names:
+                    mods.add(a.name.rsplit(".", 1)[-1])
+        return mods
+
+    def finalize(self, project):
+        for kdir in sorted(self._triples):
+            seen = self._triples[kdir]
+            anchor_path = next(iter(seen.values()))[0]
+            for want in ("kernel.py", "ref.py", "ops.py"):
+                if want not in seen and not os.path.isfile(
+                        os.path.join(kdir, want)):
+                    yield Diagnostic_(
+                        self.id, anchor_path,
+                        f"kernel package {os.path.basename(kdir)!r} is "
+                        f"missing {want} — every kernel ships as a "
+                        "kernel/ref/ops triple")
+            if "ops.py" in seen:
+                path, tree = seen["ops.py"]
+                mods = self._imports_of(tree)
+                for dep in ("kernel", "ref"):
+                    if dep not in mods:
+                        yield Diagnostic_(self.id, path,
+                                          f"ops.py dispatch does not import "
+                                          f"the `{dep}` module — parity "
+                                          "fallback path is unreachable")
+
+
+def Diagnostic_(rule_id, path, message):
+    from repro.analysis.engine import Diagnostic
+    return Diagnostic(rule=rule_id, path=path, line=1, col=1,
+                      message=message)

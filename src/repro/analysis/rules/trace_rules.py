@@ -1,0 +1,97 @@
+"""TRC rules: host-sync and host-control-flow hazards in traced code.
+
+The determinism story of the reproduction (seed-keyed guard ladder,
+bit-parity host mirrors, one compiled trace per run) assumes traced
+bodies are pure device programs.  A ``.item()`` or ``np.asarray`` on a
+tracer either crashes at trace time or — worse, under ``io_callback``
+style escapes — silently syncs the device per call; a Python ``if`` on
+a traced value bakes one branch into the compiled program.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Rule, dotted, suffix
+
+_SYNC_METHODS = frozenset({"item", "tolist", "block_until_ready"})
+_NP_SYNC = frozenset({"asarray", "array", "copyto", "save", "savez",
+                      "ascontiguousarray"})
+_CASTS = frozenset({"float", "int", "bool", "complex"})
+_TRACED_CALL_ROOTS = ("jnp.", "jax.numpy.", "lax.", "jax.lax.")
+
+
+def _static_cast_ok(arg) -> bool:
+    """Casts of static quantities (shapes, sizes, constants) are fine in
+    traced code — only casting a *traced value* forces a host sync."""
+    if isinstance(arg, ast.Constant):
+        return True
+    for n in ast.walk(arg):
+        if isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim",
+                                                       "size", "dtype"):
+            return True
+        if isinstance(n, ast.Call) and suffix(dotted(n.func)) in ("len",
+                                                                  "range"):
+            return True
+    return False
+
+
+class HostSyncInTrace(Rule):
+    id = "TRC001"
+    name = "host-sync-in-traced-code"
+    rationale = ("Traced/jitted bodies must never sync to host: "
+                 "`.item()`, `.tolist()`, `np.asarray`, or "
+                 "`float()/int()/bool()` on a traced value either fails "
+                 "at trace time or serializes the device pipeline.")
+    node_types = (ast.Call,)
+
+    def check_node(self, node, ctx):
+        if not (ctx.traced or ctx.kernel):
+            return
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SYNC_METHODS):
+            yield ctx.diag(self, node,
+                           f"`.{node.func.attr}()` inside traced code "
+                           "forces a host sync")
+            return
+        name = dotted(node.func)
+        if name:
+            parts = name.split(".")
+            if (len(parts) == 2 and parts[0] in ("np", "numpy")
+                    and parts[1] in _NP_SYNC):
+                yield ctx.diag(self, node,
+                               f"`{name}` materializes a traced value on "
+                               "host inside traced code")
+                return
+        if (isinstance(node.func, ast.Name) and node.func.id in _CASTS
+                and node.args and not _static_cast_ok(node.args[0])):
+            yield ctx.diag(self, node,
+                           f"`{node.func.id}()` on a (possibly traced) "
+                           "value inside traced code syncs to host; cast "
+                           "with `jnp.<dtype>` or hoist to the host driver")
+
+
+class TracedPythonBranch(Rule):
+    id = "TRC002"
+    name = "python-branch-on-traced-value"
+    rationale = ("Python `if`/`while`/`assert` on a traced expression "
+                 "concretizes it: the branch is resolved once at trace "
+                 "time, not per input — use `jnp.where`/`lax.cond`.")
+    node_types = (ast.If, ast.While, ast.Assert, ast.IfExp)
+
+    def check_node(self, node, ctx):
+        if not (ctx.traced or ctx.kernel):
+            return
+        test = node.test
+        for n in ast.walk(test):
+            if isinstance(n, ast.Call):
+                name = dotted(n.func) or ""
+                if name.startswith(_TRACED_CALL_ROOTS):
+                    kind = type(node).__name__.lower()
+                    yield ctx.diag(
+                        self, node,
+                        f"Python `{kind}` on traced expression "
+                        f"`{name}(...)` inside traced code — the branch "
+                        "is frozen at trace time; use `jnp.where` / "
+                        "`jax.lax.cond`")
+                    return

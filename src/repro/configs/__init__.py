@@ -1,6 +1,5 @@
 """Architecture registry: `--arch <id>` resolves here."""
 
-from repro.configs.base import ArchDef, ShapeCell
 from repro.configs import (
     command_r_35b,
     deepseek_moe_16b,
@@ -13,6 +12,7 @@ from repro.configs import (
     sasrec,
     tinyllama_1_1b,
 )
+from repro.configs.base import ArchDef, ShapeCell
 
 REGISTRY = {
     m.ARCH.arch_id: m.ARCH

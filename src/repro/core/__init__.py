@@ -1,52 +1,38 @@
 """parRSB core: the paper's contribution as a composable JAX module."""
 
+from repro.core.amg import (
+    AMG,
+    BatchedAMG,
+    amg_setup,
+    amg_setup_batched,
+    coarsen_graph,
+    heavy_edge_matching,
+)
+from repro.core.fiedler import (
+    FiedlerResult,
+    best_cut_in_pair,
+    fiedler_from_graph,
+    fiedler_from_graph_batched,
+    fiedler_from_mesh,
+    fiedler_from_mesh_batched,
+    fiedler_pair_from_graph,
+    multilevel_warm_start,
+)
+from repro.core.flexcg import CGResult, flexcg
 from repro.core.gather_scatter import (
     GSHandle,
     GSLaplacian,
-    gs_setup,
-    gs_apply,
     aw_apply,
-    weighted_laplacian,
+    gs_apply,
+    gs_setup,
     unweighted_laplacian,
+    weighted_laplacian,
 )
-from repro.core.laplacian import (
-    EllLaplacian,
-    ell_laplacian,
-    ell_laplacian_batched,
-    dense_laplacian_np,
-    fiedler_oracle_np,
-)
-from repro.core.lanczos import (lanczos_fiedler, lanczos_fiedler_batched,
-                                LanczosInfo, BatchedLanczosInfo)
-from repro.core.flexcg import flexcg, CGResult
-from repro.core.inverse_iteration import (inverse_iteration,
-                                          inverse_iteration_batched,
-                                          InverseIterInfo,
-                                          BatchedInverseIterInfo)
-from repro.core.amg import (AMG, BatchedAMG, amg_setup, amg_setup_batched,
-                            coarsen_graph, heavy_edge_matching)
-from repro.core.rcb import rcb_order, rib_order, rcb_parts, rib_parts
-from repro.core.sfc import sfc_parts, sfc_order, hilbert_index, morton_index
-from repro.core.fiedler import (fiedler_from_graph, fiedler_from_mesh, FiedlerResult,
-                                fiedler_from_graph_batched, fiedler_from_mesh_batched,
-                                fiedler_pair_from_graph, best_cut_in_pair,
-                                multilevel_warm_start)
-from repro.core.rsb import (
-    rsb_partition_mesh,
-    rsb_partition_graph,
-    RSBReport,
-    LevelRecord,
-    BisectionRecord,
-)
-from repro.core.refine import (
-    PostStats,
-    SweepRecord,
-    balance_corridor,
-    edge_cut,
-    refine_boundary,
-    refine_stage,
-    repair_components,
-    repair_refine,
+from repro.core.inverse_iteration import (
+    BatchedInverseIterInfo,
+    InverseIterInfo,
+    inverse_iteration,
+    inverse_iteration_batched,
 )
 from repro.core.kway import (
     KwayPassRecord,
@@ -54,6 +40,25 @@ from repro.core.kway import (
     kway_fm,
     kway_fm_boundary,
     kway_stage,
+)
+from repro.core.lanczos import (
+    BatchedLanczosInfo,
+    LanczosInfo,
+    lanczos_fiedler,
+    lanczos_fiedler_batched,
+)
+from repro.core.laplacian import (
+    EllLaplacian,
+    dense_laplacian_np,
+    ell_laplacian,
+    ell_laplacian_batched,
+    fiedler_oracle_np,
+)
+from repro.core.metrics import (
+    PartitionMetrics,
+    comm_time_model,
+    m2_words,
+    partition_metrics,
 )
 from repro.core.multilevel import (
     MLLevel,
@@ -64,10 +69,28 @@ from repro.core.pipeline import (
     PartitionContext,
     PartitionPipeline,
     StageRecord,
-    partition,
     parse_refine,
+    partition,
     register_bisect_stage,
     register_post_stage,
     run_post_stages,
 )
-from repro.core.metrics import partition_metrics, PartitionMetrics, comm_time_model, m2_words
+from repro.core.rcb import rcb_order, rcb_parts, rib_order, rib_parts
+from repro.core.refine import (
+    PostStats,
+    SweepRecord,
+    balance_corridor,
+    edge_cut,
+    refine_boundary,
+    refine_stage,
+    repair_components,
+    repair_refine,
+)
+from repro.core.rsb import (
+    BisectionRecord,
+    LevelRecord,
+    RSBReport,
+    rsb_partition_graph,
+    rsb_partition_mesh,
+)
+from repro.core.sfc import hilbert_index, morton_index, sfc_order, sfc_parts

@@ -31,19 +31,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.obs import jaxprof
 from repro.core.amg import amg_setup, amg_setup_batched, coarsen_graph
-from repro.core.gather_scatter import GSHandle, GSLaplacian, gs_setup, _build
+from repro.core.gather_scatter import GSHandle, GSLaplacian, _build
 from repro.core.inverse_iteration import inverse_iteration, inverse_iteration_batched
+from repro.core.lanczos import lanczos_fiedler, lanczos_fiedler_batched
 from repro.core.laplacian import (
     EllLaplacian,
     dense_laplacian_np,
-    ell_laplacian,
     ell_laplacian_batched,
     fill_ell_block as _fill_ell_block,
 )
-from repro.core.lanczos import lanczos_fiedler, lanczos_fiedler_batched
 from repro.mesh.graphs import Graph, dual_graph_from_incidence
+from repro.obs import jaxprof
 
 _DENSE_CUTOFF = 192
 

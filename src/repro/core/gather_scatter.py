@@ -36,7 +36,6 @@ into the global-id space, completed by one `psum` over the mesh axis
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -58,7 +58,6 @@ import heapq
 import numpy as np
 
 from repro import obs
-
 from repro.core.refine import (
     PostStats,
     _balance_corridor,

@@ -54,10 +54,13 @@ from repro import obs
 from repro.core.amg import coarsen_graph, heavy_edge_matching
 from repro.core.kway import kway_fm, kway_fm_boundary
 from repro.core.laplacian import dense_laplacian_np
-from repro.core.refine import (_part_weights, edge_cut, refine_boundary,
-                               repair_components)
-from repro.core.rsb import BisectionRecord, LevelRecord, RSBReport, \
-    _proportional_split
+from repro.core.refine import (
+    _part_weights,
+    edge_cut,
+    refine_boundary,
+    repair_components,
+)
+from repro.core.rsb import BisectionRecord, LevelRecord, RSBReport, _proportional_split
 from repro.mesh.graphs import Graph
 
 # Above this size the dense-eigh coarsest solve (O(n³)) costs more than it

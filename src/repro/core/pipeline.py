@@ -61,15 +61,24 @@ import numpy as np
 
 from repro import obs
 from repro.core.kway import kway_stage
-from repro.core.refine import (PostStats, balance_corridor, refine_stage,
-                               repair_components)
+from repro.core.refine import (
+    PostStats,
+    balance_corridor,
+    refine_stage,
+    repair_components,
+)
 from repro.core.rsb import RSBReport, rsb_partition_graph, rsb_partition_mesh
 from repro.guard import chaos
 from repro.guard.errors import GuardReport
 from repro.guard.policy import GuardPolicy, check_output, enforce_output
-from repro.guard.validate import (component_labels, pack_components,
-                                  proportional_budgets, validate_graph,
-                                  validate_mesh, validate_nparts)
+from repro.guard.validate import (
+    component_labels,
+    pack_components,
+    proportional_budgets,
+    validate_graph,
+    validate_mesh,
+    validate_nparts,
+)
 from repro.mesh.graphs import Graph, dual_graph_from_incidence
 
 

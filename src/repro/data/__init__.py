@@ -1,10 +1,10 @@
 """Synthetic data pipelines with host-side double-buffered prefetch."""
 
+from repro.data.pipeline import Prefetcher
 from repro.data.synthetic import (
-    token_batches,
-    lm_batch,
     gnn_full_batch,
+    lm_batch,
     molecule_batches,
     recsys_batches,
+    token_batches,
 )
-from repro.data.pipeline import Prefetcher

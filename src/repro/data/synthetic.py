@@ -8,9 +8,8 @@ power-law item popularity.
 
 from __future__ import annotations
 
-import numpy as np
-
 import jax.numpy as jnp
+import numpy as np
 
 from repro.mesh.graphs import Graph, radius_molecule_batch
 from repro.models.gnn.common import GraphBatch

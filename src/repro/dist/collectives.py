@@ -62,7 +62,9 @@ def ring_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
 
     def body(_, carry):
         acc, buf = carry
-        buf = jax.lax.ppermute(buf, axis_name, perm)
+        # The N−1 per-step hops ARE the ring schedule — this is the
+        # documented exception to one-collective-per-sweep.
+        buf = jax.lax.ppermute(buf, axis_name, perm)  # repro: ignore[DIST001]
         return acc + buf, buf
 
     acc, _ = jax.lax.fori_loop(1, n, body, (x, x))

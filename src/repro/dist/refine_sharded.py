@@ -71,10 +71,15 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import obs
-from repro.core.refine import (PostStats, SweepRecord, balance_corridor,
-                               close_with_repair, edge_cut, refine_boundary)
-from repro.dist.partition_aware import (HaloPlan, plan_halo_sharding,
-                                        scatter_features)
+from repro.core.refine import (
+    PostStats,
+    SweepRecord,
+    balance_corridor,
+    close_with_repair,
+    edge_cut,
+    refine_boundary,
+)
+from repro.dist.partition_aware import HaloPlan, plan_halo_sharding, scatter_features
 from repro.kernels.segment_sum.ops import connection_table_batched
 
 EPS = 1e-6   # strict-positive-gain threshold (f32-safe)

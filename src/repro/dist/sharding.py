@@ -16,8 +16,8 @@ including the shard_map expert-parallel MoE path.
 
 from __future__ import annotations
 
-import numpy as np
 import jax
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.common import ShardRules

@@ -7,17 +7,8 @@ harness (:mod:`repro.guard.chaos`).  See ``core/README.md`` ("Failure
 modes & degradation ladder") for the full contract.
 """
 
-from repro.guard.errors import GuardError, GuardIssue, GuardReport
 from repro.guard import chaos
-from repro.guard.validate import (
-    check_positive_int,
-    component_labels,
-    pack_components,
-    proportional_budgets,
-    validate_graph,
-    validate_mesh,
-    validate_nparts,
-)
+from repro.guard.errors import GuardError, GuardIssue, GuardReport
 from repro.guard.policy import (
     GuardPolicy,
     SolverGuard,
@@ -26,6 +17,15 @@ from repro.guard.policy import (
     enforce_output,
     failure_reason,
     fallback_vector,
+)
+from repro.guard.validate import (
+    check_positive_int,
+    component_labels,
+    pack_components,
+    proportional_budgets,
+    validate_graph,
+    validate_mesh,
+    validate_nparts,
 )
 
 __all__ = [

@@ -11,6 +11,23 @@ from __future__ import annotations
 
 import dataclasses
 
+# The catalog of stable diagnostic codes.  Every literal code passed to
+# GuardError/GuardIssue anywhere in src/ must come from this tuple (the
+# static analyzer, rule GRD002, enforces it), and the tuple must be
+# duplicate-free — callers branch on these strings, so a code's meaning
+# must be unique repo-wide.
+KNOWN_CODES = (
+    # argument validation
+    "bad-argument", "bad-nparts",
+    # graph structure
+    "malformed-csr", "self-loop", "duplicate-edge", "zero-degree-node",
+    # values
+    "nonfinite-coords", "nonfinite-edge-weight", "nonpositive-edge-weight",
+    "bad-node-weight",
+    # mesh
+    "empty-mesh",
+)
+
 
 class GuardError(ValueError):
     """A precise, actionable input/solver diagnostic.

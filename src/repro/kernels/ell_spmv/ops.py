@@ -1,12 +1,17 @@
-"""Public jit'd wrapper for the ELL SpMV kernel (CPU → interpret mode)."""
+"""Public dispatch for the ELL SpMV kernel.
+
+`prefer="auto"` (the default) runs the compiled Pallas kernel on TPU and
+the jnp reference path elsewhere — interpret mode is for parity tests
+(`prefer="pallas"` off-TPU), not production dispatch.  Same contract as
+`segment_sum.ops`."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.ell_spmv.kernel import ell_spmv_batched_pallas, ell_spmv_pallas
+from repro.kernels.ell_spmv.ref import ell_spmv_batched_ref, ell_spmv_ref
 
 
 def _on_tpu() -> bool:
@@ -20,10 +25,14 @@ def _pick_block(n: int) -> int:
     return 0
 
 
-def ell_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
+def ell_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array, *,
+             prefer: str = "auto") -> jax.Array:
     """A·x with row-major ELL inputs (n, w) — transposes to ELLPACK-T and
-    dispatches to the Pallas kernel (interpret mode off-TPU), padding n to a
-    lane-aligned block size."""
+    dispatches per ``prefer``: "auto" (Pallas on TPU, jnp reference
+    elsewhere) | "pallas" (interpret mode off-TPU) | "ref", padding n to
+    a lane-aligned block size on the Pallas path."""
+    if prefer == "ref" or (prefer == "auto" and not _on_tpu()):
+        return ell_spmv_ref(cols.T, vals.T, x)
     n, w = cols.shape
     block = _pick_block(n)
     if block == 0:
@@ -38,11 +47,15 @@ def ell_spmv(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
     return ell_spmv_pallas(cols.T, vals.T, x, block_n=block, interpret=not _on_tpu())
 
 
-def ell_spmv_batched(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
+def ell_spmv_batched(cols: jax.Array, vals: jax.Array, x: jax.Array, *,
+                     prefer: str = "auto") -> jax.Array:
     """B independent A·x products with row-major ELL inputs (B, n, w) and
     per-problem vectors (B, n) — transposes to (B, w, n) ELLPACK-T and
-    dispatches to the batched-grid Pallas kernel (interpret mode off-TPU),
-    padding n to a lane-aligned block size."""
+    dispatches per ``prefer`` (see :func:`ell_spmv`), padding n to a
+    lane-aligned block size on the Pallas path."""
+    if prefer == "ref" or (prefer == "auto" and not _on_tpu()):
+        return ell_spmv_batched_ref(cols.swapaxes(-1, -2),
+                                    vals.swapaxes(-1, -2), x)
     B, n, w = cols.shape
     block = _pick_block(n)
     if block == 0:
@@ -61,5 +74,6 @@ def ell_spmv_batched(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Arra
     )
 
 
-def lap_apply(cols: jax.Array, vals: jax.Array, diag: jax.Array, x: jax.Array):
-    return diag * x - ell_spmv(cols, vals, x)
+def lap_apply(cols: jax.Array, vals: jax.Array, diag: jax.Array,
+              x: jax.Array, *, prefer: str = "auto"):
+    return diag * x - ell_spmv(cols, vals, x, prefer=prefer)

@@ -1,4 +1,8 @@
-"""Public wrapper: sorts segments if needed, pads dim to 128 lanes."""
+"""Public dispatch: sorts segments if needed, pads dim to 128 lanes.
+
+`prefer="auto"` runs the compiled Pallas kernel on TPU and the jnp
+reference elsewhere; "pallas" forces the kernel (interpret off-TPU),
+"ref" forces the oracle.  Same contract as `segment_sum.ops`."""
 
 from __future__ import annotations
 
@@ -6,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
 
 def _on_tpu() -> bool:
@@ -20,6 +25,7 @@ def embedding_bag(
     *,
     weights: jax.Array | None = None,
     assume_sorted: bool = True,
+    prefer: str = "auto",
 ) -> jax.Array:
     V, d = table.shape
     nnz = indices.shape[0]
@@ -28,6 +34,9 @@ def embedding_bag(
     if not assume_sorted:
         order = jnp.argsort(segments)
         indices, segments, weights = indices[order], segments[order], weights[order]
+    if prefer == "ref" or (prefer == "auto" and not _on_tpu()):
+        return embedding_bag_ref(table, indices, segments, n_bags,
+                                 weights=weights)
     d_pad = -(-d // 128) * 128
     tbl = jnp.pad(table, ((0, 0), (0, d_pad - d))) if d_pad != d else table
     out = embedding_bag_pallas(

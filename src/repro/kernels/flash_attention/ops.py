@@ -1,6 +1,8 @@
-"""Public wrapper: pads sequences (at the tail) to block multiples with
-explicit real-length masking, dispatches to the Pallas kernel (interpret
-mode off-TPU)."""
+"""Public dispatch: pads sequences (at the tail) to block multiples with
+explicit real-length masking.  `prefer="auto"` runs the compiled Pallas
+kernel on TPU and the jnp reference elsewhere; "pallas" forces the
+kernel (interpret off-TPU), "ref" forces the oracle — same contract as
+`segment_sum.ops`."""
 
 from __future__ import annotations
 
@@ -8,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
 
 
 def _on_tpu() -> bool:
@@ -22,8 +25,11 @@ def flash_attention(
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
+    prefer: str = "auto",
 ) -> jax.Array:
     """Causal GQA attention, queries end-aligned with keys (ref.py semantics)."""
+    if prefer == "ref" or (prefer == "auto" and not _on_tpu()):
+        return attention_ref(q, k, v, causal=causal)
     B, Sq, H, D = q.shape
     Skv = k.shape[1]
     bq = min(block_q, max(8, Sq))

@@ -20,10 +20,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.segment_sum.kernel import (segment_sum_batched_pallas,
-                                              segment_sum_pallas)
-from repro.kernels.segment_sum.ref import (connection_table_batched_ref,
-                                           connection_table_ref)
+from repro.kernels.segment_sum.kernel import (
+    segment_sum_batched_pallas,
+    segment_sum_pallas,
+)
+from repro.kernels.segment_sum.ref import (
+    connection_table_batched_ref,
+    connection_table_ref,
+)
 
 
 def _on_tpu() -> bool:

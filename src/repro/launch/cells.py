@@ -11,7 +11,6 @@ count (mask arrays preserve semantics) — recorded in `Cell.notes`.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -22,7 +21,6 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_arch
 from repro.configs.base import ArchDef, ShapeCell
 from repro.dist.sharding import (
-    MeshRules,
     batch_specs_lm,
     cache_specs_lm,
     gnn_rules,
@@ -30,7 +28,6 @@ from repro.dist.sharding import (
     param_specs_lm,
     recsys_rules,
 )
-from repro.models.common import NO_SHARD
 from repro.models.gnn.common import GraphBatch
 from repro.train.optimizer import AdamWConfig, abstract_opt_state, adamw_update
 

@@ -29,7 +29,7 @@ import traceback
 import jax
 import numpy as np
 
-from repro.configs import REGISTRY, all_cells, get_arch
+from repro.configs import all_cells, get_arch
 from repro.launch.cells import build_cell
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import collective_wire_bytes, roofline
@@ -146,7 +146,7 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
             }
 
     coll = _Coll()
-    from repro.launch.roofline import Roofline, HBM_BW, LINK_BW, PEAK_FLOPS
+    from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, Roofline
 
     ct = census["flops"] / PEAK_FLOPS
     mt = census["bytes"] / HBM_BW

@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
 from repro.data.pipeline import Prefetcher

@@ -1,20 +1,20 @@
 """Mesh + graph substrate: hex meshes, dual graphs, graph generators."""
 
 from repro.mesh.box import HexMesh, box_mesh
-from repro.mesh.pebble import pebble_mesh
 from repro.mesh.graphs import (
     Graph,
+    build_csr,
+    connected_components,
+    connected_labels,
+    csr_to_ell,
     dual_graph,
     dual_graph_from_incidence,
     extract_subgraphs,
+    grid_coords_3d,
     grid_graph_2d,
     grid_graph_3d,
+    radius_molecule_batch,
     rmat_graph,
     stencil_graph_3d,
-    grid_coords_3d,
-    radius_molecule_batch,
-    build_csr,
-    csr_to_ell,
-    connected_components,
-    connected_labels,
 )
+from repro.mesh.pebble import pebble_mesh

@@ -6,9 +6,19 @@ part of the system (see kernel_taxonomy §GNN).
 """
 
 from repro.models.gnn.common import GraphBatch, segment_softmax
-from repro.models.gnn.meshgraphnet import MGNConfig, init_mgn, mgn_forward, mgn_loss
-from repro.models.gnn.graphcast import GraphCastConfig, init_graphcast, graphcast_forward, graphcast_loss
-from repro.models.gnn.equivariant import sh_l2, gaunt_tensor, enumerate_paths
-from repro.models.gnn.nequip import NequIPConfig, init_nequip, nequip_energy, nequip_loss
+from repro.models.gnn.equivariant import enumerate_paths, gaunt_tensor, sh_l2
+from repro.models.gnn.graphcast import (
+    GraphCastConfig,
+    graphcast_forward,
+    graphcast_loss,
+    init_graphcast,
+)
 from repro.models.gnn.mace import MACEConfig, init_mace, mace_energy, mace_loss
+from repro.models.gnn.meshgraphnet import MGNConfig, init_mgn, mgn_forward, mgn_loss
+from repro.models.gnn.nequip import (
+    NequIPConfig,
+    init_nequip,
+    nequip_energy,
+    nequip_loss,
+)
 from repro.models.gnn.sampler import sample_neighbors

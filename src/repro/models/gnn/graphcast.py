@@ -19,7 +19,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import NO_SHARD, ShardRules, layer_norm, mlp_apply, mlp_init
+from repro.models.common import NO_SHARD, ShardRules, mlp_apply, mlp_init
 from repro.models.gnn.common import GraphBatch, gather, scatter_sum
 from repro.models.gnn.meshgraphnet import _mlp_ln, _mlp_ln_init
 

@@ -14,7 +14,6 @@ objective is the framework's communication optimizer*.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,6 @@ import jax.numpy as jnp
 from repro.models.common import NO_SHARD, ShardRules, dense_init, mlp_apply, mlp_init
 from repro.models.gnn.common import GraphBatch, gather, scatter_sum
 from repro.models.gnn.equivariant import (
-    L_MAX,
-    N_IRREPS,
     n_paths,
     path_tensors,
     tensor_product,

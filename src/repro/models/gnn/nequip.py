@@ -20,7 +20,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.common import NO_SHARD, ShardRules, dense_init, mlp_apply, mlp_init
 from repro.models.gnn.common import GraphBatch, gather, scatter_sum

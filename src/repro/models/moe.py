@@ -16,7 +16,6 @@ Routing: softmax gate, top-k, renormalized among the selected experts
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

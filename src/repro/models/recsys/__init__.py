@@ -4,7 +4,7 @@ from repro.models.recsys.embedding import embedding_bag
 from repro.models.recsys.sasrec import (
     SASRecConfig,
     init_sasrec,
-    sasrec_user_state,
-    sasrec_train_loss,
     sasrec_score_candidates,
+    sasrec_train_loss,
+    sasrec_user_state,
 )

@@ -3,6 +3,26 @@
 See ``src/repro/obs/README.md`` for the API tour and exporter formats.
 """
 
+from repro.obs.export import (
+    SCHEMA,
+    expected_span_names,
+    git_sha,
+    load_manifest,
+    manifest_lines,
+    run_path,
+    to_trace_events,
+    validate_manifest,
+    write_manifest,
+    write_trace_events,
+)
+from repro.obs.jaxprof import annotate, maybe_start_trace, maybe_stop_trace
+from repro.obs.registry import (
+    MetricDef,
+    lookup,
+    merge_metrics,
+    register,
+    registered,
+)
 from repro.obs.trace import (
     NOOP_SPAN,
     Span,
@@ -19,26 +39,6 @@ from repro.obs.trace import (
     timed,
     trace,
 )
-from repro.obs.registry import (
-    MetricDef,
-    lookup,
-    merge_metrics,
-    register,
-    registered,
-)
-from repro.obs.export import (
-    SCHEMA,
-    expected_span_names,
-    git_sha,
-    load_manifest,
-    manifest_lines,
-    run_path,
-    to_trace_events,
-    validate_manifest,
-    write_manifest,
-    write_trace_events,
-)
-from repro.obs.jaxprof import annotate, maybe_start_trace, maybe_stop_trace
 
 __all__ = [
     "NOOP_SPAN", "Span", "counter_add", "current_span", "disabled",

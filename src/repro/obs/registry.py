@@ -157,3 +157,48 @@ register("guard_sanitize_fixes", "counter",
 register("guard_deadline_expired", "counter",
          description="Bisect stages whose guard deadline expired "
                      "(remaining solves go straight to fallback)")
+
+
+# ---------------------------------------------------------------------------
+# Span vocabulary — every span()/timed()/trace() name used in src/ must be
+# declared here (exact name, or under one of the dynamic prefixes).  The
+# static analyzer (repro.analysis, rule OBS001) enforces this at lint
+# time; `expected_span_names` in repro.obs.export derives the per-config
+# REQUIRED subset for the runtime drift guard from the same vocabulary.
+# ---------------------------------------------------------------------------
+
+SPAN_NAMES = (
+    # pipeline skeleton
+    "partition", "guard:validate", "guard:finalize",
+    # solver engines
+    "engine", "solve", "split",
+    # multilevel V-cycle
+    "coarsen", "coarsest", "finalize",
+    # host post chain
+    "repair", "refine_sweeps", "repair_refine", "kway_fm",
+    # sharded refinement
+    "sharded_sweeps_total",
+    # serving path
+    "serve", "prefill", "decode_step",
+)
+
+SPAN_PREFIXES = (
+    "pre:",        # pre:<stage>   — pipeline pre stage
+    "bisect:",     # bisect:<stage>
+    "post:",       # post:<stage>
+    "level:",      # level:<N>     — batched-engine tree level
+    "mlevel:",     # mlevel:<N>    — multilevel V-cycle ladder level
+    "sweep:",      # sweep:<N>     — sharded refinement sweep
+)
+
+
+def span_declared(name: str) -> bool:
+    """Is ``name`` part of the declared span vocabulary?"""
+    return name in SPAN_NAMES or any(
+        name.startswith(p) for p in SPAN_PREFIXES)
+
+
+def declared_spans() -> tuple:
+    """Snapshot of (names, prefixes) — what the drift guard and the
+    static analyzer share."""
+    return SPAN_NAMES, SPAN_PREFIXES

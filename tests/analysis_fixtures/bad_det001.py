@@ -1,0 +1,11 @@
+"""DET001 fixture: wall-clock read inside a jitted body."""
+
+import time
+
+import jax
+
+
+@jax.jit
+def f(x):
+    t = time.perf_counter()  # <- DET001
+    return x * t

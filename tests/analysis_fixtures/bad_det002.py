@@ -1,0 +1,7 @@
+"""DET002 fixture: legacy global NumPy RNG."""
+
+import numpy as np
+
+
+def jitter(n):
+    return np.random.normal(size=n)  # <- DET002

@@ -1,0 +1,8 @@
+"""DET003 fixture: hash-ordered set iteration feeding an ordered list."""
+
+
+def order(items):
+    out = []
+    for x in set(items):  # <- DET003
+        out.append(x)
+    return out

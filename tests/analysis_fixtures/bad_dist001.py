@@ -1,0 +1,11 @@
+"""DIST001 fixture: collective inside a loop body of a protocol helper
+(the function takes ``axis_name``, so it runs under shard_map at its
+call sites)."""
+
+import jax
+
+
+def leaky_sweep(x, axis_name):
+    for _ in range(3):
+        x = jax.lax.psum(x, axis_name)  # <- DIST001
+    return x

@@ -1,0 +1,10 @@
+"""DIST002 fixture: collective axis name no mesh in the module declares."""
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+SPEC = P("shards")
+
+
+def reduce_all(x):
+    return jax.lax.psum(x, "devices")  # <- DIST002

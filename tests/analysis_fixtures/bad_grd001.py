@@ -1,0 +1,8 @@
+"""GRD001 fixture: chaos site missing from FAULT_SITES."""
+
+from repro.guard import chaos
+
+
+def maybe_fail():
+    if chaos.should_fire("no-such-site"):  # <- GRD001
+        raise RuntimeError("injected")

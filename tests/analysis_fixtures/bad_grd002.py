@@ -1,0 +1,7 @@
+"""GRD002 fixture: kebab-case code not cataloged in KNOWN_CODES."""
+
+from repro.guard.errors import GuardError
+
+
+def reject():
+    raise GuardError("no-such-code", "uncataloged")  # <- GRD002

@@ -1,0 +1,8 @@
+"""OBS001 fixture: span name absent from the declared vocabulary."""
+
+from repro import obs
+
+
+def stage():
+    with obs.span("mystery_stage"):  # <- OBS001
+        pass

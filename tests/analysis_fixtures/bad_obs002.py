@@ -1,0 +1,7 @@
+"""OBS002 fixture: metric name never register()-ed."""
+
+from repro import obs
+
+
+def stage():
+    obs.counter_add("bogus_metric", 1)  # <- OBS002

@@ -1,0 +1,18 @@
+"""PAL001 fixture: BlockSpec index_map arity != grid rank."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x):
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((128,), lambda i: (i,))],  # <- PAL001
+        out_specs=pl.BlockSpec((128,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,8 @@
+"""TRC001 fixture: host sync inside a jitted body."""
+
+import jax
+
+
+@jax.jit
+def f(x):
+    return x.item()  # <- TRC001

@@ -1,0 +1,11 @@
+"""TRC002 fixture: Python branch on a traced expression."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def f(x):
+    if jnp.any(x > 0):  # <- TRC002
+        return x
+    return -x

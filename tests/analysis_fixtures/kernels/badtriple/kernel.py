@@ -1,0 +1,5 @@
+"""PAL002 fixture: the Pallas half of the triple (contents irrelevant)."""
+
+
+def badtriple_pallas(x):
+    return x

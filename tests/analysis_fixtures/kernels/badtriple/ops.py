@@ -1,0 +1,7 @@
+"""PAL002 fixture: dispatch that never imports the ``ref`` module."""
+
+from tests.analysis_fixtures.kernels.badtriple.kernel import badtriple_pallas
+
+
+def badtriple(x):
+    return badtriple_pallas(x)

@@ -1,0 +1,5 @@
+"""PAL002 fixture: the reference half of the triple."""
+
+
+def badtriple_ref(x):
+    return x

@@ -1,0 +1,231 @@
+"""Tests for ``repro.analysis`` — the AST contract checker.
+
+Three layers:
+
+* per-rule fixtures: each known-bad file under ``tests/analysis_fixtures``
+  produces exactly one diagnostic, at the ``# <- RULEID`` marker line,
+  and a ``# repro: ignore[RULEID]`` suppression silences it;
+* self-cleanliness (tier-1): the analyzer reports zero findings over
+  ``src/repro`` — the tree must stay burn-down clean;
+* vocabulary consistency: the runtime drift guard's required spans are a
+  subset of the statically declared span vocabulary.
+"""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import all_rules, analyze_paths, analyze_source
+from repro.analysis.engine import Project, findings_json, parse_suppressions
+from repro.analysis.rules import rule_ids
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "analysis_fixtures")
+SRC = os.path.normpath(os.path.join(HERE, "..", "src", "repro"))
+
+# The single-file fixtures; PAL002 needs the on-disk kernels/ tree and
+# is covered separately below.
+SINGLE_FILE_RULES = ("TRC001", "TRC002", "DET001", "DET002", "DET003",
+                     "DIST001", "DIST002", "PAL001", "OBS001", "OBS002",
+                     "GRD001", "GRD002")
+
+
+@pytest.fixture(scope="module")
+def project():
+    """One vocabulary discovery (registry/chaos/errors parse) per module."""
+    return Project(SRC)
+
+
+def _fixture_source(rule: str) -> str:
+    path = os.path.join(FIXTURES, f"bad_{rule.lower()}.py")
+    with open(path) as f:
+        return f.read()
+
+
+def _marker_line(source: str, rule: str) -> int:
+    for i, line in enumerate(source.splitlines(), start=1):
+        if f"# <- {rule}" in line:
+            return i
+    raise AssertionError(f"fixture for {rule} has no marker line")
+
+
+# ---------------------------------------------------------------------------
+# Per-rule: fixture fires exactly once, at the marker line
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", SINGLE_FILE_RULES)
+def test_rule_fires_on_fixture(rule, project):
+    source = _fixture_source(rule)
+    diags = analyze_source(source, project=project)
+    assert len(diags) == 1, [d.render() for d in diags]
+    d = diags[0]
+    assert d.rule == rule
+    assert d.line == _marker_line(source, rule)
+    assert d.message
+
+
+@pytest.mark.parametrize("rule", SINGLE_FILE_RULES)
+def test_rule_suppressed_by_ignore(rule, project):
+    source = _fixture_source(rule)
+    lines = source.splitlines()
+    lines.insert(_marker_line(source, rule) - 1, f"# repro: ignore[{rule}]")
+    assert analyze_source("\n".join(lines), project=project) == []
+
+
+@pytest.mark.parametrize("rule", SINGLE_FILE_RULES)
+def test_bare_ignore_suppresses_any_rule(rule, project):
+    source = _fixture_source(rule)
+    lines = source.splitlines()
+    lines.insert(_marker_line(source, rule) - 1, "# repro: ignore")
+    assert analyze_source("\n".join(lines), project=project) == []
+
+
+def test_wrong_rule_suppression_does_not_silence(project):
+    source = _fixture_source("TRC001")
+    lines = source.splitlines()
+    lines.insert(_marker_line(source, "TRC001") - 1,
+                 "# repro: ignore[TRC002]")
+    diags = analyze_source("\n".join(lines), project=project)
+    assert [d.rule for d in diags] == ["TRC001"]
+
+
+# ---------------------------------------------------------------------------
+# PAL002: the cross-file kernel-triple contract
+# ---------------------------------------------------------------------------
+
+
+def test_pal002_fires_on_ops_missing_ref_import(project):
+    kdir = os.path.join(FIXTURES, "kernels")
+    diags = analyze_paths([kdir], project=project)
+    assert [d.rule for d in diags] == ["PAL002"]
+    assert diags[0].path.endswith(os.path.join("badtriple", "ops.py"))
+    assert "`ref`" in diags[0].message
+
+
+def test_pal002_missing_triple_member(tmp_path, project):
+    kdir = tmp_path / "kernels" / "lonely"
+    kdir.mkdir(parents=True)
+    (kdir / "kernel.py").write_text("def lonely_pallas(x):\n    return x\n")
+    diags = analyze_paths([str(tmp_path)], project=project)
+    missing = {d.message.split("missing ")[1].split(" ")[0]
+               for d in diags if d.rule == "PAL002"}
+    assert missing == {"ref.py", "ops.py"}
+
+
+def test_pal002_suppressed_in_ops(tmp_path, project):
+    src_dir = os.path.join(FIXTURES, "kernels", "badtriple")
+    kdir = tmp_path / "kernels" / "badtriple"
+    shutil.copytree(src_dir, kdir)
+    ops = kdir / "ops.py"
+    ops.write_text("# repro: ignore[PAL002]\n" + ops.read_text())
+    assert analyze_paths([str(tmp_path)], project=project) == []
+
+
+# ---------------------------------------------------------------------------
+# Engine mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_syntax_error_becomes_parse_diagnostic(project):
+    diags = analyze_source("def f(:\n", project=project)
+    assert [d.rule for d in diags] == ["PARSE"]
+    assert "syntax error" in diags[0].message
+
+
+def test_parse_suppressions_covers_line_and_next():
+    supp = parse_suppressions(
+        "x = 1\n# repro: ignore[TRC001,DET002]\ny = 2\nz = 3\n")
+    assert supp[2] == {"TRC001", "DET002"}
+    assert supp[3] == {"TRC001", "DET002"}
+    assert 4 not in supp
+
+
+def test_static_cast_of_shape_not_flagged(project):
+    source = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    n = int(x.shape[0])\n"
+        "    return x * n\n")
+    assert analyze_source(source, project=project) == []
+
+
+def test_collective_outside_loop_not_flagged(project):
+    source = (
+        "import jax\n"
+        "def gather(buf, axis_name):\n"
+        "    return jax.lax.all_gather(buf, axis_name, tiled=True)\n")
+    assert analyze_source(source, project=project) == []
+
+
+def test_findings_json_schema(project):
+    diags = analyze_source(_fixture_source("DET002"), project=project)
+    report = json.loads(findings_json(diags))
+    assert report["schema"] == "repro.analysis/v1"
+    assert report["counts"] == {"DET002": 1}
+    assert [f["rule"] for f in report["findings"]] == ["DET002"]
+    assert {r["id"] for r in report["rules"]} == set(rule_ids())
+
+
+def test_rule_catalog_ids_unique_and_stable():
+    ids = rule_ids()
+    assert len(ids) == len(set(ids))
+    assert len(all_rules()) == len(ids)
+    for rid in SINGLE_FILE_RULES + ("PAL002",):
+        assert rid in ids
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 gates: src/ is clean, and the two span vocabularies agree
+# ---------------------------------------------------------------------------
+
+
+def test_src_tree_is_clean():
+    """The burn-down contract: the shipped tree has zero findings."""
+    diags = analyze_paths([SRC])
+    assert diags == [], "\n".join(d.render() for d in diags)
+
+
+def test_expected_spans_subset_of_declared():
+    """Every span the runtime drift guard can require must come from the
+    statically declared vocabulary the analyzer enforces."""
+    from repro.obs.export import expected_span_names
+    from repro.obs.registry import span_declared
+
+    configs = [
+        {},
+        {"guard": True, "pre": "heavy-connect", "bisect": "rsb-batched",
+         "post": ("refine", "repair-refine"), "components": 1},
+        {"bisect": "multilevel", "components": 1},
+        {"bisect": "rsb-recursive", "pre": "rcb", "components": 2},
+    ]
+    for config in configs:
+        for name in expected_span_names(config):
+            assert span_declared(name), name
+
+
+def test_cli_reports_findings_and_exit_codes(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(SRC)
+    out_json = tmp_path / "findings.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         os.path.join(FIXTURES, "bad_det002.py"),
+         "--root", SRC, "--format", "json", "--output", str(out_json)],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode == 1, proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["counts"] == {"DET002": 1}
+    assert json.loads(out_json.read_text()) == report
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list-rules"],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode == 0, proc.stderr
+    for rid in rule_ids():
+        assert rid in proc.stdout

@@ -12,8 +12,8 @@ from repro.train.checkpoint import (
     load_checkpoint,
     save_checkpoint,
 )
-from repro.train.train_loop import fit, quorum_grad_mean
 from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import fit, quorum_grad_mean
 
 
 def _tree():

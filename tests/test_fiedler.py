@@ -7,12 +7,12 @@ import pytest
 
 from repro.core import (
     amg_setup,
+    dense_laplacian_np,
     ell_laplacian,
     fiedler_from_graph,
     fiedler_from_mesh,
     fiedler_oracle_np,
     flexcg,
-    dense_laplacian_np,
 )
 from repro.mesh import box_mesh, dual_graph, grid_graph_2d, grid_graph_3d
 

@@ -20,12 +20,25 @@ from repro.configs.parrsb import PIPELINE_PRESETS, make_pipeline, make_smoke_con
 from repro.core.fiedler import FiedlerResult
 from repro.core.pipeline import PartitionPipeline
 from repro.core.rsb import _node_seed
-from repro.guard import (GuardError, GuardPolicy, GuardReport, SolverGuard,
-                         chaos, check_output, check_positive_int,
-                         component_labels, count_disconnected, enforce_output,
-                         failure_reason, fallback_vector, pack_components,
-                         proportional_budgets, validate_graph, validate_mesh,
-                         validate_nparts)
+from repro.guard import (
+    GuardError,
+    GuardPolicy,
+    GuardReport,
+    SolverGuard,
+    chaos,
+    check_output,
+    check_positive_int,
+    component_labels,
+    count_disconnected,
+    enforce_output,
+    failure_reason,
+    fallback_vector,
+    pack_components,
+    proportional_budgets,
+    validate_graph,
+    validate_mesh,
+    validate_nparts,
+)
 from repro.mesh import box_mesh, grid_graph_2d
 from repro.mesh.graphs import build_csr
 

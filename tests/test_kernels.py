@@ -1,13 +1,11 @@
 """Pallas kernels vs pure-jnp oracles: shape × dtype sweeps (interpret mode)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.ell_spmv.ops import ell_spmv, ell_spmv_batched, lap_apply
-from repro.kernels.ell_spmv.ref import (ell_spmv_batched_ref, ell_spmv_ref,
-                                        lap_apply_ref)
+from repro.kernels.ell_spmv.ref import ell_spmv_batched_ref, ell_spmv_ref, lap_apply_ref
 from repro.kernels.embedding_bag.ops import embedding_bag as eb_kernel
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_attention.ops import flash_attention
@@ -28,7 +26,7 @@ def test_ell_spmv_sweep(n, w, dtype):
     cols = jnp.asarray(RNG.integers(0, n, (n, w)), jnp.int32)
     vals = jnp.asarray(RNG.normal(size=(n, w)), dtype)
     x = jnp.asarray(RNG.normal(size=(n,)), dtype)
-    out = ell_spmv(cols, vals, x)
+    out = ell_spmv(cols, vals, x, prefer="pallas")
     ref = ell_spmv_ref(cols.T, vals.T, x)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
@@ -41,7 +39,7 @@ def test_lap_apply_kernel_matches_ref():
     vals = jnp.asarray(np.abs(RNG.normal(size=(n, w))), jnp.float32)
     diag = jnp.asarray(np.asarray(vals).sum(1))
     x = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
-    out = lap_apply(cols, vals, diag, x)
+    out = lap_apply(cols, vals, diag, x, prefer="pallas")
     ref = lap_apply_ref(cols.T, vals.T, diag, x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
@@ -53,7 +51,7 @@ def test_ell_spmv_batched_sweep(B, n, w, dtype):
     cols = jnp.asarray(RNG.integers(0, n, (B, n, w)), jnp.int32)
     vals = jnp.asarray(RNG.normal(size=(B, n, w)), dtype)
     x = jnp.asarray(RNG.normal(size=(B, n)), dtype)
-    out = ell_spmv_batched(cols, vals, x)
+    out = ell_spmv_batched(cols, vals, x, prefer="pallas")
     ref = ell_spmv_batched_ref(cols.swapaxes(-1, -2), vals.swapaxes(-1, -2), x)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
@@ -110,7 +108,7 @@ def test_embedding_bag_sweep(V, d, nnz, B):
     table = jnp.asarray(RNG.normal(size=(V, d)), dtype)
     idx = jnp.asarray(RNG.integers(0, V, nnz), jnp.int32)
     seg = jnp.asarray(np.sort(RNG.integers(0, B, nnz)), jnp.int32)
-    out = eb_kernel(table, idx, seg, B)
+    out = eb_kernel(table, idx, seg, B, prefer="pallas")
     ref = embedding_bag_ref(table, idx, seg, B)
     visited = np.zeros(B, bool)
     visited[np.asarray(seg)] = True
@@ -125,7 +123,8 @@ def test_embedding_bag_weighted_and_unsorted():
     idx = jnp.asarray(RNG.integers(0, V, nnz), jnp.int32)
     seg = jnp.asarray(RNG.integers(0, B, nnz), jnp.int32)  # UNsorted
     wgt = jnp.asarray(RNG.normal(size=nnz), jnp.float32)
-    out = eb_kernel(table, idx, seg, B, weights=wgt, assume_sorted=False)
+    out = eb_kernel(table, idx, seg, B, weights=wgt, assume_sorted=False,
+                    prefer="pallas")
     ref = embedding_bag_ref(table, idx, seg, B, weights=wgt)
     visited = np.zeros(B, bool)
     visited[np.asarray(seg)] = True
@@ -149,7 +148,8 @@ def test_flash_attention_sweep(B, Sq, Skv, H, Hkv, D, dtype):
     q = jnp.asarray(RNG.normal(size=(B, Sq, H, D)), dtype)
     k = jnp.asarray(RNG.normal(size=(B, Skv, Hkv, D)), dtype)
     v = jnp.asarray(RNG.normal(size=(B, Skv, Hkv, D)), dtype)
-    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          prefer="pallas")
     ref = attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
@@ -160,7 +160,8 @@ def test_flash_attention_noncausal():
     q = jnp.asarray(RNG.normal(size=(2, 64, 4, 32)), jnp.float32)
     k = jnp.asarray(RNG.normal(size=(2, 96, 2, 32)), jnp.float32)
     v = jnp.asarray(RNG.normal(size=(2, 96, 2, 32)), jnp.float32)
-    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=32,
+                          prefer="pallas")
     ref = attention_ref(q, k, v, causal=False)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
@@ -175,7 +176,8 @@ def test_flash_attention_matches_model_attention():
     v = jnp.asarray(RNG.normal(size=(B, S, H, D)), jnp.float32)
     pos = jnp.broadcast_to(jnp.arange(S), (B, S))
     out_model = blocked_attention(q, k, v, q_pos=pos, block_q=16, block_kv=16)
-    out_kernel = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    out_kernel = flash_attention(q, k, v, causal=True, block_q=16,
+                                 block_k=16, prefer="pallas")
     np.testing.assert_allclose(np.asarray(out_model), np.asarray(out_kernel),
                                atol=2e-5)
 

@@ -21,11 +21,10 @@ from repro.models.gnn import (
     init_nequip,
     mace_energy,
     mgn_forward,
-    mgn_loss,
     nequip_energy,
     sample_neighbors,
 )
-from repro.models.gnn.equivariant import gaunt_tensor, sh_l2_np
+from repro.models.gnn.equivariant import sh_l2_np
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
 
@@ -59,7 +58,7 @@ def molecules():
 
 def test_gaunt_parity_selection():
     """Gaunt coefficients vanish for odd l1+l2+l3 (parity)."""
-    from repro.models.gnn.equivariant import L_SLICES, enumerate_paths
+    from repro.models.gnn.equivariant import enumerate_paths
 
     for l1, l2, l3 in enumerate_paths():
         assert (l1 + l2 + l3) % 2 == 0

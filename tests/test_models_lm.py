@@ -6,14 +6,13 @@ import numpy as np
 import pytest
 
 from repro.data.synthetic import lm_batch, token_batches
-from repro.models.moe import MoEConfig, capacity, moe_apply, init_moe
+from repro.models.moe import MoEConfig, capacity, init_moe, moe_apply
 from repro.models.transformer import (
     LMConfig,
     blocked_attention,
     chunked_attention,
     decode_step,
     forward,
-    init_cache,
     init_params,
     loss_fn,
     prefill,

@@ -2,10 +2,9 @@
 coarse-to-fine warm starts, the packed BatchedAMG V-cycle, and their
 behaviour on weighted / disconnected subproblems."""
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-
-import jax.numpy as jnp
 
 from repro.core import (
     amg_setup_batched,

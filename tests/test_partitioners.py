@@ -13,7 +13,7 @@ from repro.core import (
     rsb_partition_mesh,
     sfc_parts,
 )
-from repro.mesh import box_mesh, dual_graph, grid_graph_2d, pebble_mesh
+from repro.mesh import box_mesh, dual_graph, pebble_mesh
 
 
 @pytest.fixture(scope="module")

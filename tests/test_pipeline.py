@@ -5,6 +5,7 @@ presets, and the pipeline-output contract consumers rely on."""
 import numpy as np
 import pytest
 
+from repro.configs.parrsb import PIPELINE_PRESETS, make_pipeline
 from repro.core import (
     PartitionPipeline,
     parse_refine,
@@ -13,9 +14,8 @@ from repro.core import (
     rsb_partition_graph,
     rsb_partition_mesh,
 )
-from repro.configs.parrsb import PIPELINE_PRESETS, make_pipeline
 from repro.dist.partition_aware import plan_halo_sharding
-from repro.mesh import box_mesh, dual_graph, grid_graph_2d, pebble_mesh
+from repro.mesh import box_mesh, dual_graph, grid_graph_2d
 
 
 @pytest.fixture(scope="module")

@@ -15,8 +15,8 @@ from repro.core import partition_metrics, rcb_order, rcb_parts, sfc_parts
 from repro.core.gather_scatter import aw_apply, gs_setup
 from repro.core.pipeline import PartitionPipeline
 from repro.core.rsb import _proportional_split
-from repro.mesh.graphs import build_csr, grid_graph_2d
 from repro.core.sfc import hilbert_index
+from repro.mesh.graphs import build_csr, grid_graph_2d
 
 SETTINGS = dict(max_examples=25, deadline=None)
 

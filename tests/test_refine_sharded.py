@@ -14,15 +14,16 @@ import numpy as np
 import pytest
 
 from repro import obs
-from repro.core import (balance_corridor, edge_cut, partition_metrics,
-                        refine_boundary)
+from repro.core import balance_corridor, edge_cut, partition_metrics, refine_boundary
 from repro.core.pipeline import PartitionPipeline, parse_refine
-from repro.dist.refine_sharded import (build_frontier_plan,
-                                       refine_sharded_host,
-                                       refine_sharded_stage,
-                                       kway_sharded_stage,
-                                       run_sharded_sweeps)
-from repro.mesh import box_mesh, build_csr, grid_graph_2d
+from repro.dist.refine_sharded import (
+    build_frontier_plan,
+    kway_sharded_stage,
+    refine_sharded_host,
+    refine_sharded_stage,
+    run_sharded_sweeps,
+)
+from repro.mesh import box_mesh, build_csr
 
 
 def _seeded_case(mesh, nparts, seed, frac=0.12):

@@ -6,14 +6,13 @@ that (a) is load balanced to ≤1 element, (b) has bounded neighbor counts,
 framework's partition-aware distribution (halo volume ∝ cut).
 """
 
-import numpy as np
 import pytest
 
 from repro.core import (
+    comm_time_model,
     partition,
     partition_metrics,
     rsb_partition_mesh,
-    comm_time_model,
 )
 from repro.dist.partition_aware import plan_halo_sharding
 from repro.mesh import box_mesh, dual_graph, pebble_mesh
